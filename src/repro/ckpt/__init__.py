@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from .fault_tolerance import (ElasticReMesher, HeartbeatMonitor,
+                              StragglerTracker)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "ElasticReMesher", "HeartbeatMonitor", "StragglerTracker"]

@@ -1,0 +1,19 @@
+"""Paper core: contention-aware process/shard mapping.
+
+Public surface:
+  graphs     — AppGraph / ClusterTopology / Placement
+  mapping    — blocked / cyclic / drb / new_mapping (paper Fig. 1)
+  simulator  — queueing model of message waiting times (paper sec. 5)
+  workloads  — paper Tables 2–9
+  commgraph  — AppGraph derivation for JAX jobs (collective traffic)
+  meshplan   — TPU fleet topology + device-order planning
+"""
+from .graphs import AppGraph, ClusterTopology, FreeCoreTracker, Placement
+from .mapping import STRATEGIES, blocked, cyclic, drb, new_mapping
+from .simulator import SimResult, simulate
+
+__all__ = [
+    "AppGraph", "ClusterTopology", "FreeCoreTracker", "Placement",
+    "STRATEGIES", "blocked", "cyclic", "drb", "new_mapping",
+    "SimResult", "simulate",
+]

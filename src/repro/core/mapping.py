@@ -1,0 +1,240 @@
+"""Process -> core mapping strategies.
+
+Implements the paper's Figure-1 algorithm (``new_mapping``) and the three
+comparison methods it evaluates against: ``blocked``, ``cyclic`` and ``drb``
+(dual recursive bipartitioning, the Scotch-style graph-partitioning mapper).
+
+Every strategy has the same signature::
+
+    placement = strategy(jobs, cluster)
+
+where ``jobs`` is a sequence of :class:`~repro.core.graphs.AppGraph` and the
+result maps each job's process ranks to global core ids.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .graphs import AppGraph, ClusterTopology, FreeCoreTracker, Placement
+
+Strategy = Callable[[Sequence[AppGraph], ClusterTopology], Placement]
+
+
+# ---------------------------------------------------------------------------
+# Blocked — fill a node completely, then move to the next (paper sec. 3)
+# ---------------------------------------------------------------------------
+def blocked(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+    placement = Placement(cluster)
+    tracker = FreeCoreTracker(cluster)
+    for job in jobs:
+        cores = np.empty(job.n_procs, dtype=np.int64)
+        node = 0
+        for p in range(job.n_procs):
+            while tracker.free_in_node(node) == 0:
+                node = (node + 1) % cluster.n_nodes
+            cores[p] = tracker.take_core(node, socket=None)
+        placement.assign(job.job_id, cores)
+    return placement
+
+
+# ---------------------------------------------------------------------------
+# Cyclic — round-robin processes over nodes (max nodes, min cores per node)
+# ---------------------------------------------------------------------------
+def cyclic(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+    placement = Placement(cluster)
+    tracker = FreeCoreTracker(cluster)
+    node = 0
+    for job in jobs:
+        cores = np.empty(job.n_procs, dtype=np.int64)
+        for p in range(job.n_procs):
+            tries = 0
+            while tracker.free_in_node(node) == 0:
+                node = (node + 1) % cluster.n_nodes
+                tries += 1
+                if tries > cluster.n_nodes:
+                    raise RuntimeError("cluster full")
+            cores[p] = tracker.take_core(node, socket=None)
+            node = (node + 1) % cluster.n_nodes
+        placement.assign(job.job_id, cores)
+    return placement
+
+
+# ---------------------------------------------------------------------------
+# DRB — dual recursive bipartitioning (Scotch-style)
+# ---------------------------------------------------------------------------
+def _bisect_greedy(weights: np.ndarray, seed_order: np.ndarray) -> np.ndarray:
+    """Split vertices into two balanced halves minimising cut weight.
+
+    Greedy growth from the heaviest vertex + one Kernighan–Lin refinement
+    sweep. ``weights`` is the symmetric demand matrix. Returns a boolean
+    side mask (True = side A) with |A| = ceil(n/2).
+    """
+    n = weights.shape[0]
+    half = (n + 1) // 2
+    side = np.zeros(n, dtype=bool)
+    # grow side A from the globally heaviest vertex, always absorbing the
+    # unassigned vertex with the strongest connection to A
+    start = int(seed_order[0])
+    side[start] = True
+    conn = weights[start].copy()
+    for _ in range(half - 1):
+        conn_masked = np.where(side, -np.inf, conn)
+        nxt = int(np.argmax(conn_masked))
+        if not np.isfinite(conn_masked[nxt]):  # disconnected — take by order
+            remaining = [v for v in seed_order if not side[v]]
+            nxt = int(remaining[0])
+        side[nxt] = True
+        conn += weights[nxt]
+    # one KL refinement sweep: swap pairs that reduce the cut
+    for _ in range(2):
+        improved = False
+        gain_a = weights[:, ~side].sum(axis=1) - weights[:, side].sum(axis=1)
+        gain_b = weights[:, side].sum(axis=1) - weights[:, ~side].sum(axis=1)
+        a_idx = np.where(side)[0]
+        b_idx = np.where(~side)[0]
+        if a_idx.size == 0 or b_idx.size == 0:
+            break
+        best_a = a_idx[int(np.argmax(gain_a[a_idx]))]
+        best_b = b_idx[int(np.argmax(gain_b[b_idx]))]
+        gain = gain_a[best_a] + gain_b[best_b] - 2 * weights[best_a, best_b]
+        if gain > 0:
+            side[best_a] = False
+            side[best_b] = True
+            improved = True
+        if not improved:
+            break
+    return side
+
+
+def _drb_assign(procs: np.ndarray, cores: np.ndarray, weights: np.ndarray,
+                cluster: ClusterTopology, out: np.ndarray) -> None:
+    """Recursively co-bisect process set and core set (paper sec. 3 DRB)."""
+    if len(procs) == 0:
+        return
+    if len(procs) == 1:
+        out[procs[0]] = cores[0]
+        return
+    sub = weights[np.ix_(procs, procs)]
+    order = np.argsort(-sub.sum(axis=1), kind="stable")
+    side = _bisect_greedy(sub, order)
+    procs_a, procs_b = procs[side], procs[~side]
+    # split cores along the hardware hierarchy: sort by (node, socket, slot)
+    # and cut contiguously so each half is topologically compact
+    cores_sorted = np.sort(cores)
+    cut = len(procs_a)
+    cores_a, cores_b = cores_sorted[:cut], cores_sorted[cut:]
+    _drb_assign(procs_a, cores_a, weights, cluster, out)
+    _drb_assign(procs_b, cores_b, weights, cluster, out)
+
+
+def drb(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+    placement = Placement(cluster)
+    tracker = FreeCoreTracker(cluster)
+    for job in jobs:
+        # DRB packs each job into the most compact free region (locality first)
+        free = np.where(~tracker.used)[0]
+        if free.size < job.n_procs:
+            raise RuntimeError("cluster full")
+        chosen = free[:job.n_procs]  # compact block of free cores
+        out = np.full(job.n_procs, -1, dtype=np.int64)
+        _drb_assign(np.arange(job.n_procs), chosen, job.sym_demand, cluster, out)
+        tracker.used[chosen] = True
+        placement.assign(job.job_id, out)
+    return placement
+
+
+# ---------------------------------------------------------------------------
+# The paper's new mapping strategy (Figure 1)
+# ---------------------------------------------------------------------------
+def job_threshold(job: AppGraph, tracker: FreeCoreTracker,
+                  n_nodes: int) -> int | None:
+    """Steps 3.2: decide the per-node process cap for this job.
+
+    * ``Adj_avg <= FreeCores_avg - 1``  ->  no threshold (job fits locally)
+    * otherwise eq. 2:  floor( sum_i Adj_pi/Adj_max / num_of_nodes ), min 1.
+    """
+    if job.adj_avg <= tracker.free_cores_avg() - 1:
+        return None
+    adj = job.adjacency_counts().astype(float)
+    adj_max = max(job.adj_max, 1)
+    threshold = math.floor(adj.sum() / adj_max / n_nodes)
+    return max(threshold, 1)
+
+
+def _sorted_jobs(jobs: Sequence[AppGraph]) -> list[AppGraph]:
+    """Step 2: most-adjacent jobs first (they need the free cores most)."""
+    return sorted(jobs, key=lambda j: (-j.adj_avg, j.job_id))
+
+
+def _map_one_job(job: AppGraph, tracker: FreeCoreTracker,
+                 cluster: ClusterTopology) -> np.ndarray:
+    """Steps 3.3–3.9 for a single job."""
+    P = job.n_procs
+    threshold = job_threshold(job, tracker, cluster.n_nodes)
+    cap = threshold if threshold is not None else cluster.cores_per_node
+
+    cores = np.full(P, -1, dtype=np.int64)
+    per_node_count = np.zeros(cluster.n_nodes, dtype=np.int64)  # this job only
+    cd = job.comm_demand()
+    sym = job.sym_demand
+    unmapped = set(range(P))
+
+    def node_for_next() -> int:
+        """Node with most free cores among nodes still under the job cap."""
+        frees = tracker.free_per_node().astype(float)
+        frees[per_node_count >= cap] = -np.inf
+        frees[tracker.free_per_node() == 0] = -np.inf
+        best = int(np.argmax(frees))
+        if not np.isfinite(frees[best]):
+            # every node is at cap — relax the cap (cluster must absorb the job)
+            frees = tracker.free_per_node().astype(float)
+            frees[tracker.free_per_node() == 0] = -np.inf
+            best = int(np.argmax(frees))
+            if not np.isfinite(frees[best]):
+                raise RuntimeError("cluster full")
+        return best
+
+    def place(proc: int, node: int) -> None:
+        cores[proc] = tracker.take_core(node)
+        per_node_count[node] += 1
+        unmapped.discard(proc)
+
+    while unmapped:
+        # 3.4: unmapped process with the highest communication demand
+        cand = sorted(unmapped, key=lambda p: (-cd[p], p))
+        crnt = cand[0]
+        # 3.5/3.6/3.7: node with most free cores (socket chosen inside)
+        node = node_for_next()
+        place(crnt, node)
+        # 3.8: adjacent processes sorted by pairwise demand with crnt
+        adjs = [p for p in np.argsort(-sym[crnt], kind="stable")
+                if sym[crnt, p] > 0 and p in unmapped]
+        # 3.9: co-locate adjacents up to the threshold, then spill to the
+        # node with the next-most free cores
+        for p in adjs:
+            if per_node_count[node] >= cap or tracker.free_in_node(node) == 0:
+                node = node_for_next()
+            place(int(p), node)
+    return cores
+
+
+def new_mapping(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+    """The paper's strategy: size classes -> job order -> thresholded placement."""
+    placement = Placement(cluster)
+    tracker = FreeCoreTracker(cluster)
+    for size_class in ("large", "medium", "small"):  # steps 1, 4, 6
+        pool = [j for j in jobs if j.size_class() == size_class]
+        for job in _sorted_jobs(pool):  # steps 2 + 3.1
+            placement.assign(job.job_id, _map_one_job(job, tracker, cluster))
+    return placement
+
+
+STRATEGIES: dict[str, Strategy] = {
+    "blocked": blocked,
+    "cyclic": cyclic,
+    "drb": drb,
+    "new": new_mapping,
+}

@@ -1,0 +1,67 @@
+"""Dispatch layer: Pallas kernels on TPU, jnp oracles elsewhere.
+
+The model zoo calls these wrappers only. On this container (CPU) the ref
+path executes (and is what the SPMD dry-run lowers — plain einsums that
+GSPMD partitions); on TPU the Pallas kernels take over. ``force_impl``
+lets tests pin either path; kernels themselves are exercised in
+``interpret=True`` mode by the kernel test sweeps.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+from . import ref
+
+_FORCE = os.environ.get("REPRO_KERNEL_IMPL")  # 'pallas' | 'ref' | None
+
+
+def _impl(override: Optional[str] = None) -> str:
+    if override:
+        return override
+    if _FORCE:
+        return _FORCE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+              impl: Optional[str] = None):
+    if _impl(impl) == "pallas":
+        return _fa.flash_attention(
+            q, k, v, causal=causal, q_offset=q_offset,
+            interpret=jax.default_backend() != "tpu")
+    return ref.attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, impl: Optional[str] = None):
+    # decode is a GEMV against the cache — MXU kernel buys nothing; always ref.
+    del impl
+    return ref.decode_attention(q, k_cache, v_cache, pos)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, *, impl: Optional[str] = None):
+    if _impl(impl) == "pallas":
+        return _rn.rmsnorm(x, scale, eps,
+                           interpret=jax.default_backend() != "tpu")
+    return ref.rmsnorm(x, scale, eps)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 256,
+             initial_state=None, impl: Optional[str] = None):
+    if _impl(impl) == "pallas" and initial_state is None:
+        return _ssd.ssd_scan(x, dt, A, B, C, D, chunk=chunk,
+                             interpret=jax.default_backend() != "tpu")
+    return ref.ssd_scan(x, dt, A, B, C, D, chunk=chunk,
+                        initial_state=initial_state)
+
+
+# re-exported pure helpers (no kernel variant)
+ssd_decode_step = ref.ssd_decode_step
+causal_conv1d = ref.causal_conv1d
+conv1d_step = ref.conv1d_step
+swiglu = ref.swiglu

@@ -1,0 +1,235 @@
+"""Pure-jnp oracles for every kernel (and the CPU execution path).
+
+These are the semantics of record: Pallas kernels must ``allclose`` to
+these, and the model zoo calls them through :mod:`repro.kernels.ops`.
+All functions are jit-friendly and sharding-transparent (plain einsum /
+scan — XLA SPMD partitions them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / full, chunked over queries for long sequences)
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KVH, D) -> (B, S, KVH * n_rep, D)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def _attend_block(q, k, v, mask, scale):
+    """GQA attention without materialising repeated k/v.
+
+    q: (B, Lq, H, D); k, v: (B, Lk, KVH, D), H = KVH * rep. The grouped
+    einsum reads each kv head ONCE (a rep-x HBM-traffic saving on decode,
+    where the cache read dominates). mask: broadcastable (B,1,1,Lq,Lk).
+    """
+    b, lq, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, lq, kvh, rep, d)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, lq, h, d)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, q_offset: int = 0,
+              q_chunk: int = 1024, chunk_threshold: int = 4096) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KVH, D), H % KVH == 0.
+    ``q_offset`` — absolute position of q[0] (prefill continuation).
+    Sequences longer than ``chunk_threshold`` use a lax.scan over query
+    chunks so the (Sq, Skv) score matrix is never materialised whole —
+    the pure-JAX shape of the Pallas flash kernel.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    scale = d ** -0.5
+
+    def mask_for(qpos):
+        if not causal:
+            return None
+        kpos = jnp.arange(skv)[None, :]
+        return (qpos[:, None] >= kpos)[None, None, None]  # (1,1,1,Lq,Skv)
+
+    if sq <= chunk_threshold:
+        qpos = q_offset + jnp.arange(sq)
+        return _attend_block(q, k, v, mask_for(qpos), scale)
+
+    n_chunks = sq // q_chunk
+    assert sq % q_chunk == 0, f"seq {sq} not divisible by q_chunk {q_chunk}"
+    qs = q.reshape(b, n_chunks, q_chunk, h, d)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        return None, _attend_block(qc, k, v, mask_for(qpos), scale)
+
+    _, out = jax.lax.scan(body, None,
+                          (jnp.moveaxis(qs, 1, 0), jnp.arange(n_chunks)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """Single-token attention against a fixed-size KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KVH, D); pos: (B,) int32 — index of the
+    *current* token; cache entries at index > pos are masked out.
+    """
+    b, _, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    valid = (jnp.arange(s)[None, :] <= pos[:, None])[:, None, None, None, :]
+    return _attend_block(q, k_cache, v_cache, valid, d ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) — chunked scan
+# ---------------------------------------------------------------------------
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, D: jax.Array, *, chunk: int = 256,
+             initial_state: jax.Array | None = None):
+    """Chunked SSD forward (Mamba2 sec. 6 block decomposition).
+
+    x:  (b, s, h, p)   — per-head inputs
+    dt: (b, s, h)      — positive step sizes (already softplus'ed)
+    A:  (h,)           — negative per-head decay
+    B:  (b, s, g, n)   — input projection (g groups, h % g == 0)
+    C:  (b, s, g, n)   — output projection
+    D:  (h,)           — skip
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc, l = s // chunk, chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, l, h, p)
+    dtc = dt.reshape(b, nc, l, h).astype(jnp.float32)
+    Bc = jnp.repeat(B.reshape(b, nc, l, g, n), rep, axis=3)  # (b,nc,l,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, l, g, n), rep, axis=3)
+
+    adt = A.astype(jnp.float32) * dtc                      # (b,nc,l,h) <= 0
+    cum = jnp.cumsum(adt, axis=2)                          # inclusive
+    # intra-chunk: M[i,j] = C_i.B_j * exp(cum_i - cum_j) * dt_j  (j <= i)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,i,j,h)
+    iota = jnp.arange(l)
+    causal = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    # clamp BEFORE exp: the masked (j > i) region has seg > 0 and can
+    # overflow exp in the forward pass, which turns the where() gradient
+    # into inf * 0 = NaN.
+    seg = jnp.where(causal, seg, 0.0)
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    M = scores * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc.astype(jnp.float32))
+
+    # per-chunk terminal states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc          # (b,nc,l,h)
+    Sc = jnp.einsum("bclh,bclhn,bclhp->bchpn", tail, Bc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (b,nc,h)
+
+    # inter-chunk recurrence (scan over chunks): H_{c} = decay_c * H_{c-1} + S_c
+    if initial_state is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        dec, sc = inp                                      # (b,h), (b,h,p,n)
+        new = carry * dec[:, :, None, None] + sc
+        return new, carry                                  # emit state *entering* chunk
+
+    final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(Sc, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                        # (b,nc,h,p,n)
+
+    # contribution of the incoming state: y_i += C_i . (exp(cum_i) * H_in)
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Cc * jnp.exp(cum)[..., None], h_in)
+
+    y = y_intra + y_inter + (D.astype(jnp.float32)[None, None, None, :, None]
+                             * xc.astype(jnp.float32))
+    return y.reshape(b, s, h, p).astype(x.dtype), final
+
+
+def ssd_decode_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    A: jax.Array, B_t: jax.Array, C_t: jax.Array,
+                    D: jax.Array):
+    """One-token SSD recurrence.
+
+    state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h); B_t/C_t: (b, g, n).
+    Returns (y_t: (b, h, p), new_state).
+    """
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)   # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dt = dt_t.astype(jnp.float32)
+    dec = jnp.exp(A.astype(jnp.float32)[None, :] * dt)      # (b,h)
+    upd = (dt[:, :, None] * Bh)[:, :, None, :] * x_t.astype(jnp.float32)[..., None]
+    new_state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + D.astype(jnp.float32)[None, :, None] * x_t.astype(jnp.float32)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (mamba front conv) + single-step update
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, *, cache: jax.Array | None = None):
+    """x: (b, s, c), w: (k, c) depthwise. Returns (y, new_cache (b, k-1, c))."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return y, xp[:, -(k - 1):, :]
+
+
+def conv1d_step(x_t: jax.Array, w: jax.Array, cache: jax.Array):
+    """One-token conv. x_t: (b, c); cache: (b, k-1, c)."""
+    k = w.shape[0]
+    window = jnp.concatenate([cache, x_t[:, None, :]], axis=1)  # (b,k,c)
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype))
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (fused target on TPU)
+# ---------------------------------------------------------------------------
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """x: (..., d); w_gate/w_up: (d, f); w_down: (f, d)."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

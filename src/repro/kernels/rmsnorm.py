@@ -1,0 +1,53 @@
+"""Pallas TPU fused RMSNorm.
+
+TARGET: TPU VPU. One pass over rows: mean-square, rsqrt, scale — fused so
+x is read from VMEM once (the jnp version lowers to several HBM-visible
+ops pre-fusion). Grid over row blocks; the feature dim rides whole (all
+assigned d_model <= 6144 -> <= 24 KiB/row fp32, comfortably VMEM).
+
+Validated on CPU via ``interpret=True`` against ``ref.rmsnorm``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = ((x * jax.lax.rsqrt(var + eps)).astype(o_ref.dtype)
+                  * scale_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5,
+            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (..., d); scale: (d,)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((rows + pad) // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((rows + pad), d), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

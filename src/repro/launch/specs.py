@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins + sharded step builders for every cell.
+
+``input_specs(cfg, shape)`` returns abstract inputs for the cell's step
+function (train_step / prefill / serve_step) — weak-type-correct,
+shardable, zero allocation. ``build_step`` returns the jittable function
+plus matching in_shardings, ready for ``.lower().compile()`` (dry-run)
+or execution (real run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig, ShapeSpec
+from ..data.pipeline import make_batch_specs
+from ..models import Model, build_model
+from ..parallel import ShardingPlan, activate, data_specs, make_plan, param_specs
+from ..train import AdamW, TrainPlan, make_train_step
+from ..train.optimizer import opt_state_specs
+from ..train.train_step import default_grad_accum
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, model: Model) -> dict:
+    """Abstract model inputs for one cell (no device allocation)."""
+    if shape.kind in ("train", "prefill"):
+        return make_batch_specs(cfg, shape)
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    cache = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str                     # train_step | prefill_step | serve_step
+    fn: Callable
+    args: tuple                   # abstract args, in order
+    in_shardings: tuple
+    donate_argnums: tuple
+    plan: ShardingPlan
+    model: Model
+    train_plan: Optional[TrainPlan] = None
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               rule_overrides: Optional[dict] = None,
+               remat: str = "full",
+               grad_accum: Optional[int] = None,
+               compress_grads: bool = False,
+               loss_chunk: Optional[int] = None) -> StepBundle:
+    plan = make_plan(mesh, cfg, shape, overrides=rule_overrides)
+    model = build_model(cfg, remat=remat, loss_chunk=loss_chunk)
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(plan, params_s)
+
+    if shape.kind == "train":
+        dp = plan.axis_size(plan.data_axes)
+        sp = plan.axis_size(plan.rules.get("seq"))
+        ga = grad_accum if grad_accum is not None else \
+            default_grad_accum(cfg, shape, dp, sp)
+        tp = TrainPlan(grad_accum=ga, compress_grads=compress_grads,
+                       remat=remat)
+        opt = AdamW()
+        opt_s = jax.eval_shape(opt.init, params_s)
+        o_specs = opt_state_specs(plan, params_s, opt_s)
+        batch_s = input_specs(cfg, shape, model)
+        b_specs = data_specs(plan, batch_s)
+        step = make_train_step(model, opt, tp)
+        return StepBundle("train_step", step, (params_s, opt_s, batch_s),
+                          (p_specs, o_specs, b_specs), (0, 1), plan, model,
+                          train_plan=tp)
+
+    if shape.kind == "prefill":
+        batch_s = input_specs(cfg, shape, model)
+        b_specs = data_specs(plan, batch_s)
+        return StepBundle("prefill_step", model.prefill, (params_s, batch_s),
+                          (p_specs, b_specs), (), plan, model)
+
+    # decode
+    specs = input_specs(cfg, shape, model)
+    cache_specs = data_specs(plan, specs["cache"])
+    tok_specs = data_specs(plan, {"tokens": specs["tokens"],
+                                  "pos": specs["pos"]})
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return StepBundle(
+        "serve_step", serve_step,
+        (params_s, specs["cache"], specs["tokens"], specs["pos"]),
+        (p_specs, cache_specs, tok_specs["tokens"], tok_specs["pos"]),
+        (1,), plan, model)
+
+
+def lower_step(bundle: StepBundle, mesh):
+    """jit + lower under the active plan; returns the Lowered object."""
+    jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    with mesh, activate(bundle.plan):
+        return jitted.lower(*bundle.args)

@@ -1,0 +1,99 @@
+"""Training driver: config -> mesh -> sharded train loop with
+checkpointing, straggler tracking, and simulated-failure elastic restart.
+
+On real hardware the same driver runs under `jax.distributed`; on this
+CPU container it drives reduced (smoke) configs end-to-end:
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --smoke --steps 200 --batch 16 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..ckpt import CheckpointManager, StragglerTracker
+from ..configs import get_config, get_smoke_config
+from ..data import SyntheticLM
+from ..models import build_model
+from ..train import AdamW, TrainPlan, cosine_schedule, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--simulate-failure-at", type=int, default=None,
+                    help="crash+restore at this step (fault-tolerance demo)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, remat=args.remat)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=20, total=args.steps))
+    state = opt.init(params)
+    plan = TrainPlan(grad_accum=args.grad_accum,
+                     compress_grads=args.compress_grads, remat=args.remat)
+    step_fn = jax.jit(make_train_step(model, opt, plan))
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    straggler = StragglerTracker()
+
+    start = 0
+    if mgr is not None:
+        restored = mgr.restore_latest({"params": params, "opt": state})
+        if restored[0] is not None:
+            start, tree = restored
+            params, state = tree["params"], tree["opt"]
+            print(f"resumed from step {start}")
+
+    i = start
+    while i < args.steps:
+        t0 = time.time()
+        params, state, metrics = step_fn(params, state, data(i))
+        dt = time.time() - t0
+        i += 1
+        if straggler.record(i, dt):
+            print(f"step {i}: STRAGGLER ({dt:.2f}s vs ewma "
+                  f"{straggler.ewma:.2f}s) — flagged for host replacement")
+        if i % args.log_every == 0:
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if mgr is not None and i % args.ckpt_every == 0:
+            mgr.save(i, {"params": params, "opt": state})
+        if args.simulate_failure_at == i:
+            print(f"step {i}: SIMULATED FAILURE — restoring last checkpoint")
+            assert mgr is not None, "--ckpt-dir required for failure demo"
+            mgr.wait()
+            back, tree = mgr.restore_latest({"params": params, "opt": state})
+            params, state = tree["params"], tree["opt"]
+            i = back
+            args.simulate_failure_at = None  # fail once
+    if mgr is not None:
+        mgr.save(args.steps, {"params": params, "opt": state},
+                 blocking=True)
+        mgr.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

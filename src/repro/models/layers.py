@@ -1,0 +1,193 @@
+"""Shared transformer layers: norms, positions, GQA attention, SwiGLU.
+
+All functions are pure; parameters are dicts of arrays. Attention and
+RMSNorm route through :mod:`repro.kernels.ops` (Pallas on TPU, jnp ref on
+CPU). Activation shardings are constrained with logical axis names via
+:func:`repro.parallel.shard`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig
+from ..kernels import ops
+from ..parallel import shard
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis] if in_axis is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / positions
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-5):
+    return ops.rmsnorm(x, scale, eps)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with positions (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal absolute embeddings: positions (S,)|(B,S) -> (..., d)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (init + full-sequence + decode variants)
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dtype),
+        "wk": dense_init(ks[1], (d, kvd), dtype),
+        "wv": dense_init(ks[2], (d, kvd), dtype),
+        "wo": dense_init(ks[3], (qd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.resolved_head_dim,), dtype)
+        p["k_norm"] = jnp.ones((cfg.resolved_head_dim,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "q_seq", "q_heads", None)
+    k = shard(k, "batch", None, "kv_heads_act", None)
+    v = shard(v, "batch", None, "kv_heads_act", None)
+    return q, k, v
+
+
+def attn_forward(p, x, cfg: ModelConfig, *, causal: bool = True,
+                 q_offset: int = 0, kv: tuple | None = None):
+    """Full-sequence attention. Returns (out, (k, v)) for cache building.
+
+    ``kv`` overrides computed k/v (cross-attention against memory).
+    """
+    b, s, _ = x.shape
+    positions = q_offset + jnp.arange(s)
+    q, k_new, v_new = _qkv(p, x, cfg, positions if cfg.use_rope else None)
+    k, v = kv if kv is not None else (k_new, v_new)
+    o = ops.attention(q, k, v, causal=causal, q_offset=q_offset)
+    o = shard(o, "batch", "q_seq", "q_heads", None)
+    out = o.reshape(b, s, cfg.q_dim) @ p["wo"]
+    return out, (k_new, v_new)
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
+                update_cache: bool = True):
+    """One-token attention. x: (B, 1, d); caches: (B, S, KVH, hd); pos: (B,).
+
+    Returns (out, new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = pos[:, None]  # (B,1)
+    q, k_new, v_new = _qkv(p, x, cfg, positions if cfg.use_rope else None)
+    if update_cache:
+        bidx = jnp.arange(b)
+        cache_k = cache_k.at[bidx, pos].set(k_new[:, 0])
+        cache_v = cache_v.at[bidx, pos].set(v_new[:, 0])
+    o = ops.decode_attention(q, cache_k, cache_v, pos)
+    out = o.reshape(b, 1, cfg.q_dim) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+def cross_attn_decode(p, x, mem_k, mem_v, cfg: ModelConfig):
+    """Decoder cross-attention against precomputed memory k/v (full valid)."""
+    b = x.shape[0]
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, cfg.resolved_head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    s_mem = mem_k.shape[1]
+    full = jnp.full((b,), s_mem - 1, jnp.int32)
+    o = ops.decode_attention(q, mem_k, mem_v, full)
+    return o.reshape(b, 1, cfg.q_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), dtype),
+        "w_up": dense_init(ks[1], (d, f), dtype),
+        "w_down": dense_init(ks[2], (f, d), dtype),
+    }
+
+
+def mlp_forward(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", "h_seq", "h_ff")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Dense transformer block (pre-norm residual)
+# ---------------------------------------------------------------------------
+def dense_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": attn_init(ka, cfg, dtype),
+        "mlp": mlp_init(km, cfg, dtype),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def dense_block(p, x, cfg: ModelConfig, *, causal: bool = True,
+                q_offset: int = 0):
+    h, kvs = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                          causal=causal, q_offset=q_offset)
+    x = x + h
+    x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    x = shard(x, "batch", "seq", "emb")
+    return x, kvs
+
+
+def dense_block_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    h, ck, cv = attn_decode(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                            cache_k, cache_v, pos, cfg)
+    x = x + h
+    x = x + mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, ck, cv

@@ -1,0 +1,572 @@
+"""Model builder: one ``build_model(cfg)`` for all six assigned families.
+
+Every family exposes the same functional surface:
+
+  init(key) -> params                                  (stacked per layer)
+  loss_fn(params, batch) -> (loss, metrics)            (train step core)
+  prefill(params, batch) -> (last_logits, cache)       (inference prefill)
+  decode_step(params, cache, tokens, pos)
+      -> (logits, new_cache)                           (one-token serve)
+  init_cache(batch_size, cache_len) -> zeros cache
+
+Layers are ALWAYS consumed via ``jax.lax.scan`` over stacked params so the
+lowered HLO (and compile time on 512-way SPMD) is depth-independent.
+Backward memory is controlled by ``remat`` ('full' | 'dots' | 'none').
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig
+from ..parallel import shard
+from . import layers as L
+from .moe import moe_forward, moe_init
+from .ssm import mamba_block, mamba_decode, mamba_init
+
+Pytree = Any
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # 'full': save nothing
+
+
+def _stack_init(key, n: int, init_one: Callable):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable       # (params, batch) -> (loss, metrics)
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode_step: Callable   # (params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Callable    # (batch_size, cache_len) -> cache pytree
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+def _head_init(key, cfg: ModelConfig, dt):
+    ke, kh = jax.random.split(key)
+    p = {"embed": L.embed_init(ke, (cfg.vocab_size, cfg.d_model), dt),
+         "final_norm": jnp.ones((cfg.d_model,), dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(kh, (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def _logits(p, x, cfg: ModelConfig):
+    x = L.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w.astype(x.dtype)
+    names = ("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)
+    return shard(logits, *names)
+
+
+def _xent(logits, labels):
+    """Mean token cross-entropy; logits (..., V) in any float dtype."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def _xent_chunked(p, x, labels, cfg: ModelConfig, chunk: int):
+    """CE with the head matmul + softmax streamed over seq chunks.
+
+    Never materialises the full (B, S, V) logits — the win is large for
+    200k-vocab heads (phi4-mini). Each chunk is rematerialised in the
+    backward pass (jax.checkpoint), trading ~6*d*V chunk flops for
+    O(B*S*V) activation bytes.
+    """
+    b, s, _ = x.shape
+    n = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xc = x.reshape(b, n, chunk, -1)
+    lc = labels.reshape(b, n, chunk)
+
+    @jax.checkpoint
+    def one(xi, li):
+        return _xent(_logits(p, xi, cfg), li)
+
+    def body(acc, inp):
+        xi, li = inp
+        return acc + one(xi, li), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return total / n
+
+
+def _loss_from_x(p, x, labels, cfg: ModelConfig, loss_chunk):
+    if loss_chunk:
+        return _xent_chunked(p, x, labels, cfg, loss_chunk)
+    return _xent(_logits(p, x, cfg), labels)
+
+
+def _embed_tokens(p, tokens):
+    return shard(p["embed"][tokens], "batch", "seq", "emb")
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+def _build_lm(cfg: ModelConfig, remat: str, loss_chunk=None) -> Model:
+    dt = _dtype(cfg)
+    is_moe = cfg.family == "moe"
+
+    def block_init(k):
+        p = {"attn": L.attn_init(k, cfg, dt),
+             "ln1": jnp.ones((cfg.d_model,), dt),
+             "ln2": jnp.ones((cfg.d_model,), dt)}
+        km, kk = jax.random.split(jax.random.fold_in(k, 1))
+        if is_moe:
+            p["moe"] = moe_init(km, cfg, dt)
+        else:
+            p["mlp"] = L.mlp_init(km, cfg, dt)
+        return p
+
+    def init(key):
+        kl, kh = jax.random.split(key)
+        return {"layers": _stack_init(kl, cfg.n_layers, block_init),
+                **_head_init(kh, cfg, dt)}
+
+    def _ffn(pl, h):
+        if is_moe:
+            return moe_forward(pl["moe"], h, cfg)
+        return L.mlp_forward(pl["mlp"], h), 0.0
+
+    def _block_train(carry, pl):
+        x, aux = carry
+        h, _ = L.attn_forward(pl["attn"], L.rmsnorm(x, pl["ln1"], cfg.norm_eps),
+                              cfg, causal=True)
+        x = x + h
+        f, a = _ffn(pl, L.rmsnorm(x, pl["ln2"], cfg.norm_eps))
+        x = shard(x + f, "batch", "seq", "emb")
+        return (x, aux + a), None
+
+    def forward_train(p, x):
+        (x, aux), _ = jax.lax.scan(_remat(_block_train, remat), (x, 0.0),
+                                   p["layers"])
+        return x, aux
+
+    def loss_fn(p, batch):
+        if cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["vis_embeds"].astype(dt),
+                 _embed_tokens(p, batch["tokens"])], axis=1)
+        else:
+            x = _embed_tokens(p, batch["tokens"])
+        x, aux = forward_train(p, x)
+        if cfg.family == "vlm":
+            x = x[:, cfg.n_vis_tokens:]
+        loss = _loss_from_x(p, x, batch["labels"], cfg, loss_chunk)
+        total = loss + 0.01 * aux
+        return total, {"xent": loss, "aux": aux}
+
+    def _block_prefill(carry, pl):
+        x, aux = carry
+        h, (k, v) = L.attn_forward(pl["attn"],
+                                   L.rmsnorm(x, pl["ln1"], cfg.norm_eps),
+                                   cfg, causal=True)
+        x = x + h
+        f, a = _ffn(pl, L.rmsnorm(x, pl["ln2"], cfg.norm_eps))
+        x = shard(x + f, "batch", "seq", "emb")
+        return (x, aux + a), (k, v)
+
+    def prefill(p, batch):
+        if cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["vis_embeds"].astype(dt),
+                 _embed_tokens(p, batch["tokens"])], axis=1)
+        else:
+            x = _embed_tokens(p, batch["tokens"])
+        b, s = x.shape[0], x.shape[1]
+        (x, _), (ks, vs) = jax.lax.scan(_block_prefill, (x, 0.0), p["layers"])
+        cache = {"k": shard(ks, None, "batch", "cache_seq", "cache_kv_heads", None),
+                 "v": shard(vs, None, "batch", "cache_seq", "cache_kv_heads", None),
+                 "pos": jnp.full((b,), s - 1, jnp.int32)}
+        return _logits(p, x[:, -1], cfg), cache
+
+    def _block_decode(carry, xs):
+        x, pos = carry
+        pl, ck, cv = xs
+        x, ck, cv = L.dense_block_decode(pl, x, ck, cv, pos, cfg) \
+            if not is_moe else _moe_block_decode(pl, x, ck, cv, pos)
+        return (x, pos), (ck, cv)
+
+    def _moe_block_decode(pl, x, ck, cv, pos):
+        h, ck, cv = L.attn_decode(pl["attn"],
+                                  L.rmsnorm(x, pl["ln1"], cfg.norm_eps),
+                                  ck, cv, pos, cfg)
+        x = x + h
+        f, _ = moe_forward(pl["moe"], L.rmsnorm(x, pl["ln2"], cfg.norm_eps), cfg)
+        return x + f, ck, cv
+
+    def decode_step(p, cache, tokens, pos):
+        x = _embed_tokens(p, tokens)  # (B, 1, d)
+        (x, _), (ks, vs) = jax.lax.scan(
+            _block_decode, (x, pos), (p["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "pos": pos}
+        return _logits(p, x[:, -1], cfg), new_cache
+
+    def init_cache(batch_size: int, cache_len: int):
+        hd = cfg.resolved_head_dim
+        shp = (cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt),
+                "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Pure SSM (mamba2)
+# ---------------------------------------------------------------------------
+def _build_ssm(cfg: ModelConfig, remat: str, loss_chunk=None) -> Model:
+    dt = _dtype(cfg)
+
+    def init(key):
+        kl, kh = jax.random.split(key)
+        return {"layers": _stack_init(kl, cfg.n_layers,
+                                      lambda k: mamba_init(k, cfg, dt)),
+                **_head_init(kh, cfg, dt)}
+
+    def _block(x, pl):
+        y, _ = mamba_block(pl, x, cfg)
+        return y, None
+
+    def loss_fn(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+        x, _ = jax.lax.scan(_remat(_block, remat), x, p["layers"])
+        loss = _loss_from_x(p, x, batch["labels"], cfg, loss_chunk)
+        return loss, {"xent": loss, "aux": 0.0}
+
+    def prefill(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+        b = x.shape[0]
+
+        def body(x, pl):
+            y, (conv, ssm) = mamba_block(pl, x, cfg, return_state=True)
+            return y, (conv, ssm)
+
+        x, (convs, ssms) = jax.lax.scan(body, x, p["layers"])
+        cache = {"conv": convs, "ssm": ssms,
+                 "pos": jnp.full((b,), batch["tokens"].shape[1] - 1, jnp.int32)}
+        return _logits(p, x[:, -1], cfg), cache
+
+    def decode_step(p, cache, tokens, pos):
+        x = _embed_tokens(p, tokens)
+
+        def body(x, xs):
+            pl, conv, ssm = xs
+            y, conv, ssm = mamba_decode(pl, x, conv, ssm, cfg)
+            return y, (conv, ssm)
+
+        x, (convs, ssms) = jax.lax.scan(
+            body, x, (p["layers"], cache["conv"], cache["ssm"]))
+        return (_logits(p, x[:, -1], cfg),
+                {"conv": convs, "ssm": ssms, "pos": pos})
+
+    def init_cache(batch_size: int, cache_len: int):
+        s = cfg.ssm
+        conv_c = cfg.d_inner + 2 * s.n_groups * s.state_dim
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch_size, s.conv_dim - 1,
+                               conv_c), dt),
+            "ssm": jnp.zeros((cfg.n_layers, batch_size, cfg.n_ssm_heads,
+                              s.head_dim, s.state_dim), jnp.float32),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): [5 mamba + shared attn] x 13  +  3 mamba
+# ---------------------------------------------------------------------------
+def _hybrid_layout(cfg: ModelConfig):
+    k = cfg.attn_every
+    n_super = cfg.n_layers // k            # superblocks of (k-1 mamba + attn)
+    n_tail = cfg.n_layers - n_super * k    # trailing mamba layers
+    return n_super, k - 1, n_tail
+
+
+def _build_hybrid(cfg: ModelConfig, remat: str, loss_chunk=None) -> Model:
+    dt = _dtype(cfg)
+    n_super, m_per, n_tail = _hybrid_layout(cfg)
+
+    def init(key):
+        ka, kb, ksh, kh = jax.random.split(key, 4)
+        mamba_a = _stack_init(ka, n_super * m_per,
+                              lambda k: mamba_init(k, cfg, dt))
+        mamba_a = jax.tree.map(
+            lambda x: x.reshape(n_super, m_per, *x.shape[1:]), mamba_a)
+        p = {"mamba_a": mamba_a,
+             "shared_attn": L.dense_block_init(ksh, cfg, dt),
+             **_head_init(kh, cfg, dt)}
+        if n_tail:
+            p["mamba_b"] = _stack_init(kb, n_tail,
+                                       lambda k: mamba_init(k, cfg, dt))
+        return p
+
+    def _super_train(shared):
+        def body(x, pl):
+            def inner(xc, pm):
+                y, _ = mamba_block(pm, xc, cfg)
+                return y, None
+            x, _ = jax.lax.scan(inner, x, pl)
+            x, _ = L.dense_block(shared, x, cfg, causal=True)
+            return x, None
+        return body
+
+    def _tail_train(x, pl):
+        y, _ = mamba_block(pl, x, cfg)
+        return y, None
+
+    def loss_fn(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+        x, _ = jax.lax.scan(_remat(_super_train(p["shared_attn"]), remat),
+                            x, p["mamba_a"])
+        if n_tail:
+            x, _ = jax.lax.scan(_remat(_tail_train, remat), x, p["mamba_b"])
+        loss = _loss_from_x(p, x, batch["labels"], cfg, loss_chunk)
+        return loss, {"xent": loss, "aux": 0.0}
+
+    def prefill(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+        b, s = x.shape[0], x.shape[1]
+
+        def body(x, pl):
+            def inner(xc, pm):
+                y, st = mamba_block(pm, xc, cfg, return_state=True)
+                return y, st
+            x, (conv, ssm) = jax.lax.scan(inner, x, pl)
+            h, (k, v) = L.attn_forward(
+                p["shared_attn"]["attn"],
+                L.rmsnorm(x, p["shared_attn"]["ln1"], cfg.norm_eps), cfg)
+            x = x + h
+            x = x + L.mlp_forward(p["shared_attn"]["mlp"],
+                                  L.rmsnorm(x, p["shared_attn"]["ln2"],
+                                            cfg.norm_eps))
+            return x, (conv, ssm, k, v)
+
+        x, (conv_a, ssm_a, ks, vs) = jax.lax.scan(body, x, p["mamba_a"])
+        cache = {"conv_a": conv_a, "ssm_a": ssm_a,
+                 "k": shard(ks, None, "batch", "cache_seq", "cache_kv_heads", None),
+                 "v": shard(vs, None, "batch", "cache_seq", "cache_kv_heads", None),
+                 "pos": jnp.full((b,), s - 1, jnp.int32)}
+        if n_tail:
+            def tail(x, pl):
+                y, st = mamba_block(pl, x, cfg, return_state=True)
+                return y, st
+            x, (conv_b, ssm_b) = jax.lax.scan(tail, x, p["mamba_b"])
+            cache["conv_b"], cache["ssm_b"] = conv_b, ssm_b
+        return _logits(p, x[:, -1], cfg), cache
+
+    def decode_step(p, cache, tokens, pos):
+        x = _embed_tokens(p, tokens)
+
+        def body(x, xs):
+            pl, conv, ssm, ck, cv = xs
+            def inner(carry, xs_in):
+                pm, c, s_ = xs_in
+                y, c, s_ = mamba_decode(pm, carry, c, s_, cfg)
+                return y, (c, s_)
+            x, (conv, ssm) = jax.lax.scan(inner, x, (pl, conv, ssm))
+            sa = p["shared_attn"]
+            h, ck, cv = L.attn_decode(sa["attn"],
+                                      L.rmsnorm(x, sa["ln1"], cfg.norm_eps),
+                                      ck, cv, pos, cfg)
+            x = x + h
+            x = x + L.mlp_forward(sa["mlp"], L.rmsnorm(x, sa["ln2"],
+                                                       cfg.norm_eps))
+            return x, (conv, ssm, ck, cv)
+
+        x, (conv_a, ssm_a, ks, vs) = jax.lax.scan(
+            body, x, (p["mamba_a"], cache["conv_a"], cache["ssm_a"],
+                      cache["k"], cache["v"]))
+        new = {"conv_a": conv_a, "ssm_a": ssm_a, "k": ks, "v": vs, "pos": pos}
+        if n_tail:
+            def tail(x, xs_in):
+                pm, c, s_ = xs_in
+                y, c, s_ = mamba_decode(pm, x, c, s_, cfg)
+                return y, (c, s_)
+            x, (conv_b, ssm_b) = jax.lax.scan(
+                tail, x, (p["mamba_b"], cache["conv_b"], cache["ssm_b"]))
+            new["conv_b"], new["ssm_b"] = conv_b, ssm_b
+        return _logits(p, x[:, -1], cfg), new
+
+    def init_cache(batch_size: int, cache_len: int):
+        s = cfg.ssm
+        conv_c = cfg.d_inner + 2 * s.n_groups * s.state_dim
+        hd = cfg.resolved_head_dim
+        cache = {
+            "conv_a": jnp.zeros((n_super, m_per, batch_size, s.conv_dim - 1,
+                                 conv_c), dt),
+            "ssm_a": jnp.zeros((n_super, m_per, batch_size, cfg.n_ssm_heads,
+                                s.head_dim, s.state_dim), jnp.float32),
+            "k": jnp.zeros((n_super, batch_size, cache_len, cfg.n_kv_heads,
+                            hd), dt),
+            "v": jnp.zeros((n_super, batch_size, cache_len, cfg.n_kv_heads,
+                            hd), dt),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+        if n_tail:
+            cache["conv_b"] = jnp.zeros((n_tail, batch_size, s.conv_dim - 1,
+                                         conv_c), dt)
+            cache["ssm_b"] = jnp.zeros((n_tail, batch_size, cfg.n_ssm_heads,
+                                        s.head_dim, s.state_dim), jnp.float32)
+        return cache
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper) — frames arrive pre-embedded (stub frontend)
+# ---------------------------------------------------------------------------
+def _build_enc_dec(cfg: ModelConfig, remat: str, loss_chunk=None) -> Model:
+    dt = _dtype(cfg)
+
+    def dec_block_init(k):
+        ks, kc, km = jax.random.split(k, 3)
+        return {"self": L.attn_init(ks, cfg, dt),
+                "cross": L.attn_init(kc, cfg, dt),
+                "mlp": L.mlp_init(km, cfg, dt),
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+                "ln3": jnp.ones((cfg.d_model,), dt)}
+
+    def init(key):
+        ke, kd, kh = jax.random.split(key, 3)
+        return {
+            "enc_layers": _stack_init(ke, cfg.n_enc_layers,
+                                      lambda k: L.dense_block_init(k, cfg, dt)),
+            "dec_layers": _stack_init(kd, cfg.n_layers, dec_block_init),
+            **_head_init(kh, cfg, dt),
+        }
+
+    def encode(p, frames):
+        x = frames.astype(dt) + L.sinusoid(
+            jnp.arange(frames.shape[1]), cfg.d_model).astype(dt)
+
+        def body(x, pl):
+            y, _ = L.dense_block(pl, x, cfg, causal=False)
+            return y, None
+
+        x, _ = jax.lax.scan(_remat(body, remat), x, p["enc_layers"])
+        return shard(x, "batch", None, "emb")
+
+    def _dec_block(memory):
+        def body(x, pl):
+            h, kv = L.attn_forward(pl["self"],
+                                   L.rmsnorm(x, pl["ln1"], cfg.norm_eps),
+                                   cfg, causal=True)
+            x = x + h
+            cross_kv = _mem_kv(pl["cross"], memory)  # cache the MEMORY k/v
+            hc, _ = L.attn_forward(
+                pl["cross"], L.rmsnorm(x, pl["ln2"], cfg.norm_eps), cfg,
+                causal=False, kv=cross_kv)
+            x = x + hc
+            x = x + L.mlp_forward(pl["mlp"],
+                                  L.rmsnorm(x, pl["ln3"], cfg.norm_eps))
+            return x, (kv, cross_kv)
+        return body
+
+    def _mem_kv(pc, memory):
+        b, s, _ = memory.shape
+        hd = cfg.resolved_head_dim
+        k = (memory @ pc["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (memory @ pc["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        return k, v
+
+    def _dec_embed(p, tokens):
+        x = _embed_tokens(p, tokens)
+        return x + L.sinusoid(jnp.arange(tokens.shape[1]),
+                              cfg.d_model).astype(dt)
+
+    def loss_fn(p, batch):
+        memory = encode(p, batch["frames"])
+        x = _dec_embed(p, batch["tokens"])
+        x, _ = jax.lax.scan(_remat(_dec_block(memory), remat), x,
+                            p["dec_layers"])
+        loss = _loss_from_x(p, x, batch["labels"], cfg, loss_chunk)
+        return loss, {"xent": loss, "aux": 0.0}
+
+    def prefill(p, batch):
+        memory = encode(p, batch["frames"])
+        x = _dec_embed(p, batch["tokens"])
+        b, s = x.shape[0], x.shape[1]
+        x, (kvs, cross_kvs) = jax.lax.scan(_dec_block(memory), x,
+                                           p["dec_layers"])
+        (ks, vs), (cks, cvs) = kvs, cross_kvs
+        cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+                 "pos": jnp.full((b,), s - 1, jnp.int32)}
+        return _logits(p, x[:, -1], cfg), cache
+
+    def decode_step(p, cache, tokens, pos):
+        x = _embed_tokens(p, tokens)
+        x = x + L.sinusoid(pos[:, None], cfg.d_model).astype(dt)
+
+        def body(carry, xs):
+            x, pos = carry
+            pl, ck, cv, mk, mv = xs
+            h, ck, cv = L.attn_decode(pl["self"],
+                                      L.rmsnorm(x, pl["ln1"], cfg.norm_eps),
+                                      ck, cv, pos, cfg)
+            x = x + h
+            x = x + L.cross_attn_decode(pl["cross"],
+                                        L.rmsnorm(x, pl["ln2"], cfg.norm_eps),
+                                        mk, mv, cfg)
+            x = x + L.mlp_forward(pl["mlp"],
+                                  L.rmsnorm(x, pl["ln3"], cfg.norm_eps))
+            return (x, pos), (ck, cv)
+
+        (x, _), (ks, vs) = jax.lax.scan(
+            body, (x, pos), (p["dec_layers"], cache["k"], cache["v"],
+                             cache["cross_k"], cache["cross_v"]))
+        new = dict(cache, k=ks, v=vs, pos=pos)
+        return _logits(p, x[:, -1], cfg), new
+
+    def init_cache(batch_size: int, cache_len: int):
+        hd = cfg.resolved_head_dim
+        enc_len = max(cache_len // 4, 1)
+        self_shp = (cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, hd)
+        cross_shp = (cfg.n_layers, batch_size, enc_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(self_shp, dt), "v": jnp.zeros(self_shp, dt),
+                "cross_k": jnp.zeros(cross_shp, dt),
+                "cross_v": jnp.zeros(cross_shp, dt),
+                "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+def build_model(cfg: ModelConfig, remat: str = "full",
+                loss_chunk: Optional[int] = None) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _build_lm(cfg, remat, loss_chunk)
+    if cfg.family == "ssm":
+        return _build_ssm(cfg, remat, loss_chunk)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg, remat, loss_chunk)
+    if cfg.family == "enc_dec":
+        return _build_enc_dec(cfg, remat, loss_chunk)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,120 @@
+"""Mamba2 block: projections + causal conv + gated SSD scan.
+
+Forward uses the chunked SSD scan (ops.ssd_scan — Pallas on TPU); decode
+uses the O(1) recurrence with conv/state caches. The block follows
+arXiv:2405.21060: x/z/B/C/dt projections, depthwise conv over the (x,B,C)
+streams, per-head scalar decay A, gated RMSNorm before out-projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig
+from ..kernels import ops
+from ..parallel import shard
+from .layers import dense_init, rmsnorm
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads
+    gn = s.n_groups * s.state_dim
+    conv_c = di + 2 * gn
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": dense_init(ks[0], (d, di), dtype),
+        "wx": dense_init(ks[1], (d, di), dtype),
+        "wB": dense_init(ks[2], (d, gn), dtype),
+        "wC": dense_init(ks[3], (d, gn), dtype),
+        "wdt": dense_init(ks[4], (d, nh), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(ks[5], (s.conv_dim, conv_c), dtype, in_axis=0),
+        "norm": jnp.ones((di,), dtype),
+        "ln1": jnp.ones((d,), dtype),
+        "out_proj": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _project(p, x, cfg: ModelConfig):
+    s = cfg.ssm
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    Bc = x @ p["wB"]
+    Cc = x @ p["wC"]
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xin, Bc, Cc, dt
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """x: (B, S, d) -> (y, (conv_cache, ssm_state)) if return_state."""
+    s = cfg.ssm
+    b, sl, d = x.shape
+    di, nh = cfg.d_inner, cfg.n_ssm_heads
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    z, xin, Bc, Cc, dt = _project(p, xn, cfg)
+
+    stream = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    stream = shard(stream, "batch", None, "conv_c")
+    conv, conv_cache = ops.causal_conv1d(stream, p["conv_w"])
+    conv = jax.nn.silu(conv)
+    xin = conv[..., :di]
+    Bc = conv[..., di:di + s.n_groups * s.state_dim]
+    Cc = conv[..., di + s.n_groups * s.state_dim:]
+
+    xh = xin.reshape(b, sl, nh, s.head_dim)
+    xh = shard(xh, "batch", None, "nh", None)
+    Bh = Bc.reshape(b, sl, s.n_groups, s.state_dim)
+    Ch = Cc.reshape(b, sl, s.n_groups, s.state_dim)
+    A = -jnp.exp(p["A_log"])
+    # pad to a chunk multiple; padded steps are identity updates (dt = 0
+    # -> decay exp(0) = 1, input contribution 0), so y[:sl] and the final
+    # state are exact.
+    pad = (-sl) % s.chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, state = ops.ssd_scan(xh, dt, A, Bh, Ch, p["D"], chunk=s.chunk)
+    if pad:
+        y = y[:, :sl]
+    y = y.reshape(b, sl, di) * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = x + y @ p["out_proj"]
+    out = shard(out, "batch", "seq", "emb")
+    if return_state:
+        return out, (conv_cache, state)
+    return out, None
+
+
+def mamba_decode(p, x, conv_cache, ssm_state, cfg: ModelConfig):
+    """One token. x: (B, 1, d); conv_cache: (B, k-1, c); ssm_state: (B,nh,p,n).
+
+    Returns (y, conv_cache, ssm_state).
+    """
+    s = cfg.ssm
+    b = x.shape[0]
+    di, nh = cfg.d_inner, cfg.n_ssm_heads
+    xn = rmsnorm(x[:, 0], p["ln1"], cfg.norm_eps)
+    z, xin, Bc, Cc, dt = _project(p, xn, cfg)
+
+    stream = jnp.concatenate([xin, Bc, Cc], axis=-1)         # (B, c)
+    conv, conv_cache = ops.conv1d_step(stream, p["conv_w"], conv_cache)
+    conv = jax.nn.silu(conv)
+    xin = conv[..., :di]
+    Bc = conv[..., di:di + s.n_groups * s.state_dim]
+    Cc = conv[..., di + s.n_groups * s.state_dim:]
+
+    xh = xin.reshape(b, nh, s.head_dim)
+    Bh = Bc.reshape(b, s.n_groups, s.state_dim)
+    Ch = Cc.reshape(b, s.n_groups, s.state_dim)
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ops.ssd_decode_step(ssm_state, xh, dt, A, Bh, Ch, p["D"])
+    y = y.reshape(b, di) * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = x + (y @ p["out_proj"])[:, None, :]
+    return out, conv_cache, ssm_state

@@ -1,0 +1,5 @@
+from .sharding import (ShardingPlan, activate, active_plan, data_specs,
+                       make_plan, param_specs, shard)
+
+__all__ = ["ShardingPlan", "activate", "active_plan", "data_specs",
+           "make_plan", "param_specs", "shard"]

@@ -1,0 +1,297 @@
+"""Logical-axis sharding: one rules table, every arch, both meshes.
+
+Scheme (MaxText-style logical axes):
+
+* every parameter leaf name maps to a tuple of LOGICAL axis names
+  (``LEAF_AXES``); leading stack dims (scan-over-layers) are implicit.
+* a :class:`ShardingPlan` maps logical names -> mesh axes for one
+  (mesh x arch x shape); :func:`make_plan` builds the baseline plan and
+  hillclimb overrides mutate ``rules``.
+* model code never sees the mesh: it calls :func:`shard` with logical
+  names, resolved against the *active* plan (a module global set by the
+  step builders). With no active plan the call is a no-op, so single-
+  device smoke tests run the same code.
+
+Baseline distribution:
+  batch  -> all data-like mesh axes ('pod','data')   [DP]
+  q_dim / kv_dim / ff / vocab / experts / ssm_inner -> 'model'  [TP/EP]
+  seq    -> 'model' for train (sequence-parallel residuals), 'data' for
+            batch-1 long-context decode
+  cache_seq -> 'model' when kv heads don't divide the model axis
+            (flash-decode style cache split), else kv sharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ModelConfig, ShapeSpec
+
+# ---------------------------------------------------------------------------
+# Leaf name -> logical axes (per trailing dim; leading stack dims implicit)
+# ---------------------------------------------------------------------------
+LEAF_AXES: dict[str, tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("vocab", "w_emb"),
+    "head": ("w_emb", "vocab"),
+    "pos_embed": ("seq_const", "w_emb"),
+    # attention
+    "wq": ("w_emb", "q_dim"),
+    "wk": ("w_emb", "kv_dim"),
+    "wv": ("w_emb", "kv_dim"),
+    "wo": ("q_dim", "w_emb"),
+    "q_norm": ("head_dim",),
+    "k_norm": ("head_dim",),
+    # dense mlp
+    "w_gate": ("w_emb", "ff"),
+    "w_up": ("w_emb", "ff"),
+    "w_down": ("ff", "w_emb"),
+    # MoE
+    "router": ("w_emb", "experts_r"),
+    "moe_gate": ("experts", "w_emb", "ff"),
+    "moe_up": ("experts", "w_emb", "ff"),
+    "moe_down": ("experts", "ff", "w_emb"),
+    "sh_gate": ("w_emb", "sh_ff"),
+    "sh_up": ("w_emb", "sh_ff"),
+    "sh_down": ("sh_ff", "w_emb"),
+    # mamba2
+    "wz": ("w_emb", "ssm_inner"),
+    "wx": ("w_emb", "ssm_inner"),
+    "wB": ("w_emb", "gn"),
+    "wC": ("w_emb", "gn"),
+    "wdt": ("w_emb", "nh"),
+    "dt_bias": ("nh",),
+    "A_log": ("nh",),
+    "D": ("nh",),
+    "conv_w": ("conv_k", "conv_c"),
+    "out_proj": ("ssm_inner", "w_emb"),
+    # norms
+    "ln1": ("w_emb",), "ln2": ("w_emb",), "ln3": ("w_emb",),
+    "norm": ("w_emb",), "final_norm": ("w_emb",),
+}
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: dict[str, Any]          # logical axis -> mesh axis (str/tuple/None)
+    cfg: ModelConfig
+    shape: ShapeSpec
+
+    @property
+    def data_axes(self):
+        return self.rules["batch"]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a tuple of per-dim logical names."""
+        return P(*[self.rules.get(a) if a else None for a in logical])
+
+    def named(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+
+
+# ---------------------------------------------------------------------------
+# Active-plan global (set by step builders, read by model code)
+# ---------------------------------------------------------------------------
+_ACTIVE: list[Optional[ShardingPlan]] = [None]
+
+
+def active_plan() -> Optional[ShardingPlan]:
+    return _ACTIVE[0]
+
+
+@contextlib.contextmanager
+def activate(plan: Optional[ShardingPlan]):
+    prev = _ACTIVE[0]
+    _ACTIVE[0] = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE[0] = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o a plan).
+
+    Skips any axis whose extent doesn't divide the mesh axes product —
+    keeps one code path valid for smoke shapes and full shapes alike.
+    """
+    plan = _ACTIVE[0]
+    if plan is None:
+        return x
+    dims = []
+    for d, name in enumerate(logical):
+        axes = plan.rules.get(name) if name else None
+        if axes is not None and x.shape[d] % plan.axis_size(axes) != 0:
+            axes = None
+        dims.append(axes)
+    if all(a is None for a in dims):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, P(*dims)))
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+def make_plan(mesh: Mesh, cfg: ModelConfig, shape: ShapeSpec,
+              overrides: Optional[dict[str, Any]] = None) -> ShardingPlan:
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names) or None
+    model = "model" if "model" in names else None
+    msize = mesh.shape[model] if model else 1
+
+    batch1 = shape.global_batch == 1
+    rules: dict[str, Any] = {
+        "batch": None if batch1 else data_axes,
+        # sequence-parallel residual stream for train; long-context decode
+        # spreads the cache/sequence over the idle data axes instead
+        "seq": (model if shape.kind == "train" else
+                (data_axes if batch1 else None)),
+        "emb": None,
+        "w_emb": None,   # set to "data" for FSDP/ZeRO-3 weight sharding
+        "q_dim": model, "kv_dim": model, "head_dim": None,
+        "ff": model, "vocab": model,
+        "sh_ff": model,
+        "ssm_inner": model, "nh": model, "gn": None,
+        "conv_k": None, "conv_c": model,
+        "state": None,
+        "seq_const": None,
+        "experts_r": None,
+    }
+    # attention activation sharding: heads over 'model' when they divide
+    # it; otherwise shard the QUERY SEQUENCE over 'model' for the S^2
+    # score/context matmuls (context parallelism) — without this, a head
+    # count like phi4-mini's 24 on a 16-way axis replicates the whole
+    # attention computation on every device (16x flops).
+    heads_ok = bool(cfg.n_heads) and model is not None \
+        and cfg.n_heads % msize == 0
+    kv_ok = bool(cfg.n_kv_heads) and model is not None \
+        and cfg.n_kv_heads % msize == 0
+    rules["q_heads"] = model if heads_ok else None
+    rules["kv_heads_act"] = model if kv_ok else None
+    rules["q_seq"] = (model if (not heads_ok and cfg.n_heads
+                                and shape.kind in ("train", "prefill"))
+                      else None)
+    # experts: EP over model when it divides, else TP inside each expert
+    if cfg.moe is not None and model is not None:
+        if cfg.moe.n_experts % msize == 0:
+            rules["experts"] = model
+            rules["ff"] = None
+        else:
+            rules["experts"] = None
+            rules["ff"] = model
+    else:
+        rules["experts"] = None
+    # MLP hidden activations: ff-sharded (classic TP) when ff weights are
+    # sharded; otherwise sequence-sharded (seq-local MLP, zero MLP
+    # collectives — pairs with replicated MLP weights via {'ff': None}).
+    rules["h_ff"] = rules["ff"]
+    rules["h_seq"] = None if rules["ff"] is not None else rules["seq"]
+    # KV-cache sharding (decode input cache / prefill output cache):
+    # shard kv heads when they divide the model axis, else split the
+    # cache sequence over it (flash-decode style).
+    if shape.kind in ("decode", "prefill"):
+        kv_shardable = (cfg.n_kv_heads and model is not None
+                        and cfg.n_kv_heads % msize == 0)
+        rules["cache_kv_heads"] = model if kv_shardable else None
+        rules["cache_seq"] = ((data_axes if batch1 else None) if kv_shardable
+                              else model)
+    else:
+        rules["cache_kv_heads"] = None
+        rules["cache_seq"] = None
+    if overrides:
+        rules.update(overrides)
+        if "ff" in overrides and "h_ff" not in overrides:
+            rules["h_ff"] = rules["ff"]
+            rules["h_seq"] = None if rules["ff"] is not None else rules["seq"]
+    return ShardingPlan(mesh=mesh, rules=rules, cfg=cfg, shape=shape)
+
+
+# ---------------------------------------------------------------------------
+# Pytree spec derivation
+# ---------------------------------------------------------------------------
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def param_specs(plan: ShardingPlan, params) -> Any:
+    """NamedSharding tree matching ``params`` via LEAF_AXES."""
+    def one(path, leaf):
+        name = _leaf_name(path)
+        axes = LEAF_AXES.get(name)
+        if axes is None:
+            raise KeyError(f"no LEAF_AXES entry for param {name!r} "
+                           f"(path {jax.tree_util.keystr(path)})")
+        stack = leaf.ndim - len(axes)
+        assert stack >= 0, (name, leaf.shape, axes)
+        logical = (None,) * stack + axes
+        dims = []
+        for d, lname in enumerate(logical):
+            ax = plan.rules.get(lname) if lname else None
+            if ax is not None and leaf.shape[d] % plan.axis_size(ax) != 0:
+                ax = None
+            dims.append(ax)
+        return NamedSharding(plan.mesh, P(*dims))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def data_specs(plan: ShardingPlan, batch) -> Any:
+    """NamedSharding tree for an input batch / cache pytree.
+
+    Leaf logical axes are resolved by name convention:
+      tokens/labels      (B, S)            -> (batch, None)
+      vis_embeds/frames  (B, S, d)         -> (batch, None, None)
+      k/v caches         (.., B, S, KV, d) -> (.., batch, cache_seq, kv, None)
+      ssm state          (L, B, nh, p, n)  -> (None, batch, nh, None, None)
+      conv state         (L, B, k-1, c)    -> (None, batch, None, conv_c)
+      pos                (B,)              -> (batch,)
+      memory             (B, S, d)         -> (batch, None, None)
+    """
+    def one(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in ("tokens", "labels", "loss_mask"):
+            logical = ("batch",) + (None,) * (nd - 1)
+        elif name in ("vis_embeds", "frames", "memory"):
+            logical = ("batch", None, None)
+        elif name in ("k", "v", "cross_k", "cross_v"):
+            stack = nd - 4
+            logical = (None,) * stack + ("batch", "cache_seq",
+                                         "cache_kv_heads", None)
+        elif name == "ssm":
+            stack = nd - 4
+            logical = (None,) * stack + ("batch", "nh", None, None)
+        elif name == "conv":
+            stack = nd - 3
+            logical = (None,) * stack + ("batch", None, "conv_c")
+        elif name == "pos":
+            logical = ("batch",)
+        else:
+            logical = (None,) * nd
+        dims = []
+        for d, lname in enumerate(logical):
+            ax = plan.rules.get(lname) if lname else None
+            if ax is not None and leaf.shape[d] % plan.axis_size(ax) != 0:
+                ax = None
+            dims.append(ax)
+        return NamedSharding(plan.mesh, P(*dims))
+    return jax.tree_util.tree_map_with_path(one, batch)

@@ -1,0 +1,5 @@
+from .optimizer import AdamW, cosine_schedule, global_norm
+from .train_step import TrainPlan, make_train_step
+
+__all__ = ["AdamW", "cosine_schedule", "global_norm", "TrainPlan",
+           "make_train_step"]

@@ -1,0 +1,127 @@
+"""AdamW with mixed precision and ZeRO-1 state sharding (from scratch).
+
+Params live in the compute dtype (bf16 on the fleet); the optimizer holds
+fp32 master params + first/second moments. Under a ShardingPlan the
+optimizer state is additionally sharded over the data axes (ZeRO-1): for
+each leaf the first dimension that is unsharded and divisible picks up
+the data axes — see :func:`zero_specs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..parallel import ShardingPlan, param_specs
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any      # fp32 params
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+@dataclasses.dataclass
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jax.tree.map(
+            lambda x: x.astype(jnp.float32), p)
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                          mu=zeros,
+                          nu=jax.tree.map(jnp.zeros_like, zeros))
+
+    def update(self, params, grads, state: AdamWState):
+        """Returns (new_params_in_compute_dtype, new_state, stats)."""
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.float32(1.0)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        gs = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        mu = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g, gs, state.mu)
+        nu = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * g * g, gs, state.nu)
+        master = jax.tree.map(
+            lambda m, v, mp: mp - lr * ((m / c1) / (jnp.sqrt(v / c2) + self.eps)
+                                        + self.weight_decay * mp),
+            mu, nu, state.master)
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, AdamWState(step, master, mu, nu), {
+            "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding for the optimizer state
+# ---------------------------------------------------------------------------
+def zero_specs(plan: ShardingPlan, params) -> Any:
+    """Optimizer-state NamedShardings: param spec + data axes on one dim.
+
+    For each leaf, take the parameter's spec and add the plan's data axes
+    to the first dimension that is currently unsharded and divisible —
+    classic ZeRO-1 so fp32 master/mu/nu are split across data replicas.
+    """
+    base = param_specs(plan, params)
+    data_axes = plan.data_axes
+    if data_axes is None:
+        return base
+    dsize = plan.axis_size(data_axes)
+
+    def one(leaf, sh: NamedSharding):
+        dims = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        flat = set()
+        for d in dims:
+            for a in ((d,) if isinstance(d, str) else (d or ())):
+                flat.add(a)
+        if not flat.intersection(data_axes):   # already FSDP-sharded: done
+            for d in range(leaf.ndim):
+                if dims[d] is None and leaf.shape[d] % dsize == 0 and \
+                        leaf.shape[d] >= dsize:
+                    dims[d] = (data_axes if len(data_axes) > 1
+                               else data_axes[0])
+                    break
+        return NamedSharding(plan.mesh, P(*dims))
+
+    return jax.tree.map(one, params, base)
+
+
+def opt_state_specs(plan: ShardingPlan, params,
+                    state_like: AdamWState) -> AdamWState:
+    z = zero_specs(plan, params)
+    scalar = NamedSharding(plan.mesh, P())
+    del state_like
+    return AdamWState(step=scalar, master=z, mu=z, nu=z)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run with the REAL device count (1 CPU device) — only the dry-run
+# is allowed to fake 512 devices. SPMD tests spawn subprocesses that set
+# XLA_FLAGS before importing jax (see test_spmd.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,181 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+from repro.kernels.ssd_scan import ssd_scan as pallas_ssd
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention sweep: shapes x dtypes x causality x GQA
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,kvh,d", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4x
+    (1, 256, 16, 8, 128),    # qwen3-like head_dim
+    (2, 128, 4, 1, 32),      # MQA
+    (1, 512, 2, 2, 112),     # zamba2-like non-128 head_dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(b, s, h, kvh, d, causal):
+    q, k, v = _rand(b, s, h, d), _rand(b, s, kvh, d), _rand(b, s, kvh, d)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    q = _rand(2, 128, 4, 64, dtype=dtype)
+    k = _rand(2, 128, 2, 64, dtype=dtype)
+    v = _rand(2, 128, 2, 64, dtype=dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_q_offset():
+    """Continuation prefill: q at absolute offset attends to earlier kv."""
+    sq, skv = 64, 256
+    q = _rand(1, sq, 4, 64)
+    k, v = _rand(1, skv, 4, 64), _rand(1, skv, 4, 64)
+    got = flash_attention(q, k, v, causal=True, q_offset=skv - sq,
+                          block_q=32, block_k=64)
+    want = ref.attention(q, k, v, causal=True, q_offset=skv - sq)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_blocks_dont_change_result():
+    q, k, v = _rand(1, 256, 4, 64), _rand(1, 256, 2, 64), _rand(1, 256, 2, 64)
+    outs = [flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+
+def test_ref_attention_chunked_equals_dense():
+    """The scan-over-q-chunks path == dense path (long-seq correctness)."""
+    q, k, v = _rand(1, 512, 4, 32), _rand(1, 512, 2, 32), _rand(1, 512, 2, 32)
+    dense = ref.attention(q, k, v, causal=True, chunk_threshold=4096)
+    chunked = ref.attention(q, k, v, causal=True, chunk_threshold=256,
+                            q_chunk=128)
+    np.testing.assert_allclose(chunked, dense, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_last_row():
+    q, k, v = _rand(2, 128, 8, 64), _rand(2, 128, 2, 64), _rand(2, 128, 2, 64)
+    full = ref.attention(q, k, v, causal=True)
+    pos = jnp.full((2,), 127, jnp.int32)
+    dec = ref.decode_attention(q[:, -1:], k, v, pos)
+    np.testing.assert_allclose(dec, full[:, -1:], rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_masks_beyond_pos():
+    """Cache entries past pos must not affect the output."""
+    q = _rand(1, 1, 4, 32)
+    k, v = _rand(1, 64, 4, 32), _rand(1, 64, 4, 32)
+    pos = jnp.array([20], jnp.int32)
+    base = ref.decode_attention(q, k, v, pos)
+    k2 = k.at[:, 30:].set(99.0)
+    v2 = v.at[:, 30:].set(-99.0)
+    np.testing.assert_allclose(ref.decode_attention(q, k2, v2, pos), base,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan sweep
+# ---------------------------------------------------------------------------
+def _ssd_inputs(b, s, h, p, g, n):
+    x = _rand(b, s, h, p)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.3, 2.0, (h,)), jnp.float32)
+    B = _rand(b, s, g, n)
+    C = _rand(b, s, g, n)
+    D = _rand(h)
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 64, 2, 8, 1, 4, 16),
+    (2, 128, 4, 16, 2, 8, 32),
+    (1, 256, 8, 32, 1, 16, 64),
+    (2, 96, 4, 16, 4, 8, 32),     # non-power-of-two chunk count
+])
+def test_ssd_pallas_vs_ref(b, s, h, p, g, n, chunk):
+    args = _ssd_inputs(b, s, h, p, g, n)
+    y_ref, st_ref = ref.ssd_scan(*args, chunk=chunk)
+    y_pal, st_pal = pallas_ssd(*args, chunk=chunk)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(st_pal, st_ref, rtol=3e-5, atol=3e-5)
+
+
+def test_ssd_chunked_equals_sequential():
+    """Chunked SSD == token-by-token recurrence (the SSD duality)."""
+    b, s, h, p, g, n = 1, 64, 2, 8, 1, 4
+    x, dt, A, B, C, D = _ssd_inputs(b, s, h, p, g, n)
+    y_ref, st_ref = ref.ssd_scan(x, dt, A, B, C, D, chunk=16)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y, state = ref.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                       B[:, t], C[:, t], D)
+        ys.append(y)
+    np.testing.assert_allclose(y_ref, jnp.stack(ys, 1), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_ref, state, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence at a chunk boundary and chaining states must
+    equal one full scan (prefill -> decode handoff invariant)."""
+    b, s, h, p, g, n = 1, 128, 2, 8, 1, 4
+    x, dt, A, B, C, D = _ssd_inputs(b, s, h, p, g, n)
+    y_full, st_full = ref.ssd_scan(x, dt, A, B, C, D, chunk=32)
+    y1, st1 = ref.ssd_scan(x[:, :64], dt[:, :64], A, B[:, :64], C[:, :64],
+                           D, chunk=32)
+    y2, st2 = ref.ssd_scan(x[:, 64:], dt[:, 64:], A, B[:, 64:], C[:, 64:],
+                           D, chunk=32, initial_state=st1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st2, st_full, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm / conv
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows,d,block", [(8, 64, 4), (100, 96, 32),
+                                          (256, 1024, 256), (5, 48, 8)])
+def test_rmsnorm_sweep(rows, d, block):
+    x = _rand(rows, d)
+    scale = _rand(d)
+    got = pallas_rmsnorm(x, scale, block_rows=block)
+    want = ref.rmsnorm(x, scale)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 6), s=st.integers(4, 32), c=st.integers(1, 8))
+def test_conv_step_equals_full(k, s, c):
+    x = _rand(2, s, c)
+    w = _rand(k, c)
+    y_full, cache_full = ref.causal_conv1d(x, w)
+    cache = jnp.zeros((2, k - 1, c))
+    ys = []
+    for t in range(s):
+        y, cache = ref.conv1d_step(x[:, t], w, cache)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_full, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(cache, cache_full, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,150 @@
+"""Mapping-strategy unit + property tests (paper Fig. 1 and baselines)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AppGraph, ClusterTopology, FreeCoreTracker,
+                        STRATEGIES, new_mapping)
+from repro.core.graphs import pattern_traffic, PATTERNS
+from repro.core.mapping import job_threshold
+
+
+def _random_jobs(rng, n_jobs, max_procs, cluster):
+    jobs = []
+    total = 0
+    for j in range(n_jobs):
+        procs = int(rng.integers(2, max_procs + 1))
+        if total + procs > cluster.n_cores:
+            break
+        total += procs
+        pattern = PATTERNS[int(rng.integers(0, len(PATTERNS)))]
+        length = float(rng.choice([1024, 64 * 1024, 2 << 20]))
+        jobs.append(AppGraph.from_pattern(
+            f"j{j}", pattern, procs, length, 10.0, 100, job_id=j))
+    return jobs
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_placement_validity(strategy, seed):
+    """Every strategy: each process gets exactly one core, no double-use."""
+    cluster = ClusterTopology()
+    rng = np.random.default_rng(seed)
+    jobs = _random_jobs(rng, 6, 48, cluster)
+    placement = STRATEGIES[strategy](jobs, cluster)
+    placement.validate()
+    for job in jobs:
+        cores = placement.assignments[job.job_id]
+        assert cores.shape == (job.n_procs,)
+        assert (cores >= 0).all() and (cores < cluster.n_cores).all()
+
+
+def test_blocked_uses_min_nodes():
+    cluster = ClusterTopology()
+    jobs = [AppGraph.from_pattern("j0", "all_to_all", 16, 1024, 1.0, 10,
+                                  job_id=0)]
+    placement = STRATEGIES["blocked"](jobs, cluster)
+    nodes = cluster.node_of(placement.assignments[0])
+    assert len(np.unique(nodes)) == 1  # 16 procs fit one 16-core node
+
+
+def test_cyclic_uses_max_nodes():
+    cluster = ClusterTopology()
+    jobs = [AppGraph.from_pattern("j0", "all_to_all", 16, 1024, 1.0, 10,
+                                  job_id=0)]
+    placement = STRATEGIES["cyclic"](jobs, cluster)
+    nodes = cluster.node_of(placement.assignments[0])
+    assert len(np.unique(nodes)) == cluster.n_nodes
+
+
+def test_threshold_no_cap_when_job_fits():
+    """Paper step 3.2: Adj_avg <= FreeCores_avg - 1 -> no threshold."""
+    cluster = ClusterTopology()
+    tracker = FreeCoreTracker(cluster)
+    job = AppGraph.from_pattern("j", "linear", 8, 1024, 1.0, 10)
+    # linear adjacency ~2 << 15 free cores per node
+    assert job_threshold(job, tracker, cluster.n_nodes) is None
+
+
+def test_threshold_eq2_clamped_to_one():
+    """Eq. 2 floors to 0 when nodes > procs; paper sets it to 1."""
+    cluster = ClusterTopology(n_nodes=64)
+    tracker = FreeCoreTracker(cluster)
+    tracker.used[:] = True
+    tracker.used[: 64 * 4] = False          # few free cores -> threshold path
+    for n in range(64):                      # 4 free per node
+        tracker.used[n * 16: n * 16 + 4] = False
+    job = AppGraph.from_pattern("j", "all_to_all", 24, 2 << 20, 10.0, 10)
+    th = job_threshold(job, tracker, cluster.n_nodes)
+    assert th == 1
+
+
+def test_new_mapping_respects_threshold_per_node():
+    """With an all-to-all job wider than a node, the per-node process
+    count of that job must not exceed the paper threshold (cap)."""
+    cluster = ClusterTopology()
+    job = AppGraph.from_pattern("j", "all_to_all", 64, 2 << 20, 10.0, 100,
+                                job_id=0)
+    tracker = FreeCoreTracker(cluster)
+    th = job_threshold(job, tracker, cluster.n_nodes)
+    assert th is not None
+    placement = new_mapping([job], cluster)
+    nodes = cluster.node_of(placement.assignments[0])
+    counts = np.bincount(nodes, minlength=cluster.n_nodes)
+    assert counts.max() <= max(th, 1)
+
+
+def test_large_jobs_mapped_before_small():
+    """Size classes: a large-message job gets first pick of the cores."""
+    cluster = ClusterTopology()
+    small = AppGraph.from_pattern("s", "all_to_all", 32, 1024, 10.0, 10,
+                                  job_id=0)
+    large = AppGraph.from_pattern("l", "all_to_all", 32, 2 << 20, 10.0, 10,
+                                  job_id=1)
+    placement = new_mapping([small, large], cluster)
+    # the large job is placed first -> it occupies the max-free nodes
+    # deterministically starting from node 0's cohort
+    assert set(placement.assignments[1]).isdisjoint(
+        set(placement.assignments[0]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(procs=st.integers(2, 64),
+       pattern=st.sampled_from(PATTERNS),
+       length=st.sampled_from([512, 4096, 1 << 20, 4 << 20]))
+def test_property_any_single_job_valid(procs, pattern, length):
+    cluster = ClusterTopology()
+    job = AppGraph.from_pattern("j", pattern, procs, length, 5.0, 10,
+                                job_id=0)
+    for strategy in STRATEGIES.values():
+        placement = strategy([job], cluster)
+        placement.validate()
+        assert placement.assignments[0].size == procs
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_multi_job_no_collisions(seed):
+    cluster = ClusterTopology()
+    rng = np.random.default_rng(seed)
+    jobs = _random_jobs(rng, 5, 40, cluster)
+    for strategy in STRATEGIES.values():
+        placement = strategy(jobs, cluster)
+        placement.validate()
+
+
+def test_pattern_traffic_shapes():
+    for pattern in PATTERNS:
+        L, lam, cnt = pattern_traffic(pattern, 8, 1024.0, 2.0, 7)
+        assert L.shape == lam.shape == cnt.shape == (8, 8)
+        assert (L >= 0).all() and np.diag(L).sum() == 0
+
+
+def test_appgraph_quantities():
+    g = AppGraph.from_pattern("j", "gather_reduce", 8, 1024, 2.0, 5)
+    cd = g.comm_demand()
+    assert cd.shape == (8,)
+    # root receives only -> zero *outgoing* demand; senders have demand
+    assert cd[0] == 0 and (cd[1:] > 0).all()
+    assert g.adj_max == 7  # root adjacent to all others
+    assert g.size_class() == "small"

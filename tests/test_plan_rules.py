@@ -1,0 +1,98 @@
+"""Plan-rule unit tests for the §Perf levers (q_seq/CP, h_ff/h_seq,
+FSDP w_emb, loss_chunk) — the optimization surface must stay coherent."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.models import build_model
+from repro.parallel import make_plan
+
+
+def _mesh16():
+    # 1-device mesh but with production axis EXTENTS faked via abstract
+    # checks — rule logic only consults mesh axis sizes, so use a real
+    # 1x1 mesh and assert on the decision inputs instead where needed.
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_q_seq_rule_targets_nondivisible_heads():
+    """With a 16-way model axis: phi4 (24H) gets q_seq, yi (32H) gets
+    q_heads. Checked via the decision predicate (mesh here is 1x1, so we
+    assert the config-side facts the rule keys on)."""
+    assert get_config("phi4-mini-3.8b").n_heads % 16 != 0
+    assert get_config("yi-6b").n_heads % 16 == 0
+    assert get_config("internvl2-26b").n_heads % 16 == 0   # 48 heads
+    assert get_config("internvl2-26b").n_kv_heads % 16 != 0  # kv8
+    assert get_config("whisper-tiny").n_heads % 16 != 0    # 6 heads
+
+
+def test_h_rules_mutually_exclusive():
+    mesh = _mesh16()
+    cfg = get_config("yi-6b")
+    plan = make_plan(mesh, cfg, SHAPES["train_4k"])
+    assert not (plan.rules["h_ff"] and plan.rules["h_seq"])
+    plan2 = make_plan(mesh, cfg, SHAPES["train_4k"], overrides={"ff": None})
+    assert plan2.rules["h_ff"] is None
+    assert plan2.rules["h_seq"] == plan2.rules["seq"]
+
+
+def test_fsdp_override_reaches_weight_leaves():
+    from repro.parallel import param_specs
+    mesh = _mesh16()
+    cfg = get_smoke_config("granite-3-2b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    plan = make_plan(mesh, cfg, SHAPES["train_4k"],
+                     overrides={"w_emb": "data"})
+    specs = param_specs(plan, params)
+    wq = specs["layers"]["attn"]["wq"].spec
+    assert "data" in str(wq)
+
+
+def test_loss_chunk_grad_exact():
+    cfg = get_smoke_config("qwen3-0.6b")
+    m1 = build_model(cfg)
+    m2 = build_model(cfg, loss_chunk=8)
+    params = m1.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                          0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                          0, cfg.vocab_size)}
+    l1, _ = m1.loss_fn(params, batch)
+    l2, _ = m2.loss_fn(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    g1 = jax.grad(lambda p: m1.loss_fn(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: m2.loss_fn(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_ssm_chunk_padding_any_length():
+    """mamba forward must accept sequences not divisible by the chunk."""
+    cfg = get_smoke_config("mamba2-370m")   # chunk 32
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    for s in (7, 32, 33, 50):
+        batch = {"tokens": jnp.ones((1, s), jnp.int32),
+                 "labels": jnp.ones((1, s), jnp.int32)}
+        loss, _ = model.loss_fn(params, batch)
+        assert np.isfinite(float(loss)), s
+
+
+def test_moe_capacity_override():
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    big = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    m = build_model(big)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    loss, _ = m.loss_fn(params, batch)
+    assert np.isfinite(float(loss))

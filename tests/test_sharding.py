@@ -1,0 +1,103 @@
+"""ShardingPlan rules + spec derivation (single-device: no mesh needed
+beyond a trivial one; divisibility logic is what's under test)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.models import build_model
+from repro.parallel import make_plan, param_specs, data_specs
+from repro.parallel.sharding import LEAF_AXES
+from repro.train import AdamW
+from repro.train.optimizer import zero_specs
+
+
+def _mesh1():
+    # single-device mesh with production axis names: sizes 1 -> every rule
+    # resolves, nothing actually shards.
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "phi3.5-moe-42b-a6.6b",
+                                  "qwen2-moe-a2.7b", "mamba2-370m",
+                                  "zamba2-7b", "whisper-tiny",
+                                  "internvl2-26b", "qwen3-0.6b"])
+def test_every_param_leaf_has_axes(arch):
+    """param_specs must resolve every leaf of every family (no KeyError)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    plan = make_plan(_mesh1(), cfg, SHAPES["train_4k"])
+    specs = param_specs(plan, params)
+    assert jax.tree.structure(specs) == jax.tree.structure(params)
+
+
+def test_rules_experts_vs_ff():
+    mesh = _mesh1()
+    phi = make_plan(mesh, get_config("phi3.5-moe-42b-a6.6b"),
+                    SHAPES["train_4k"])
+    qwen = make_plan(mesh, get_config("qwen2-moe-a2.7b"), SHAPES["train_4k"])
+    # 16 experts divide the model axis (size 1 here divides trivially,
+    # use the logic directly at 16)
+    from jax.sharding import Mesh as M
+    assert phi.rules["experts"] is not None or phi.axis_size("model") == 1
+    # qwen2: 60 % 16 != 0 on the real mesh -> checked in dry-run configs;
+    # here assert the rule table is internally consistent
+    assert (qwen.rules["experts"] is None) or (qwen.rules["ff"] is None)
+
+
+def test_decode_cache_rules():
+    mesh = _mesh1()
+    granite = make_plan(mesh, get_config("granite-3-2b"),
+                        SHAPES["decode_32k"])
+    assert granite.rules["cache_seq"] is not None or \
+        granite.rules["cache_kv_heads"] is not None
+    train = make_plan(mesh, get_config("granite-3-2b"), SHAPES["train_4k"])
+    assert train.rules["cache_seq"] is None
+
+
+def test_long_context_rules():
+    mesh = _mesh1()
+    plan = make_plan(mesh, get_config("mamba2-370m"), SHAPES["long_500k"])
+    assert plan.rules["batch"] is None          # batch=1 cannot shard
+    assert plan.rules["seq"] is not None        # sequence takes the data axes
+
+
+def test_zero_specs_add_data_axis():
+    cfg = get_smoke_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = make_plan(_mesh1(), cfg, SHAPES["train_4k"])
+    zs = zero_specs(plan, params)
+    # at least the embedding picks up the data axis on an unsharded dim
+    leaves = jax.tree.leaves(zs)
+    assert all(hasattr(s, "spec") for s in leaves)
+
+
+def test_data_specs_structure():
+    cfg = get_smoke_config("granite-3-2b")
+    model = build_model(cfg)
+    plan = make_plan(_mesh1(), cfg, SHAPES["decode_32k"])
+    cache = jax.eval_shape(lambda: model.init_cache(4, 64))
+    specs = data_specs(plan, cache)
+    assert jax.tree.structure(specs) == jax.tree.structure(cache)
+
+
+def test_leaf_axes_table_covers_model_zoo():
+    """Every leaf name used by any family appears in LEAF_AXES."""
+    names = set()
+    for arch in ("granite-3-2b", "phi3.5-moe-42b-a6.6b", "qwen2-moe-a2.7b",
+                 "mamba2-370m", "zamba2-7b", "whisper-tiny", "qwen3-0.6b"):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]:
+            for entry in reversed(path):
+                if hasattr(entry, "key"):
+                    names.add(str(entry.key))
+                    break
+    missing = names - set(LEAF_AXES)
+    assert not missing, missing

@@ -1,0 +1,132 @@
+"""Queueing-simulator tests: Lindley recursion vs brute force, routing."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AppGraph, ClusterTopology, Placement, simulate
+from repro.core.simulator import _lindley_waits
+
+
+# ---------------------------------------------------------------------------
+# Lindley recursion
+# ---------------------------------------------------------------------------
+def _brute_force_waits(arrival, service):
+    waits = []
+    free_at = 0.0
+    for a, s in zip(arrival, service):
+        start = max(a, free_at)
+        waits.append(start - a)
+        free_at = start + s
+    return np.array(waits)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 100), st.floats(0.001, 10)),
+                min_size=1, max_size=40))
+def test_lindley_matches_brute_force(pairs):
+    arrival = np.sort(np.array([p[0] for p in pairs]))
+    service = np.array([p[1] for p in pairs])
+    got = _lindley_waits(arrival, service)
+    want = _brute_force_waits(arrival, service)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Routing semantics
+# ---------------------------------------------------------------------------
+def _place(job, cores):
+    cluster = ClusterTopology()
+    p = Placement(cluster)
+    p.assign(job.job_id, np.asarray(cores))
+    return p, cluster
+
+
+def test_single_message_no_wait():
+    job = AppGraph.from_pattern("j", "linear", 2, 1024, 1.0, 1, job_id=0)
+    p, cluster = _place(job, [0, 16])  # different nodes -> NIC
+    res = simulate([job], p)
+    assert res.total_wait == 0.0
+    assert res.n_messages == 1
+
+
+def test_contention_creates_waits():
+    """Many senders on ONE node -> TX-NIC queueing; spread senders (with
+    disjoint receivers) -> far less waiting. This is the paper's core
+    premise in miniature."""
+    n = 8
+    L = np.zeros((2 * n, 2 * n))
+    lam = np.zeros_like(L)
+    cnt = np.zeros((2 * n, 2 * n), dtype=np.int64)
+    for i in range(n):                       # i -> i+n disjoint pairs
+        L[i, n + i] = 1 << 20
+        lam[i, n + i] = 1000.0
+        cnt[i, n + i] = 20
+    job = AppGraph("j", L, lam, cnt, job_id=0)
+    # all senders on node 0 (one TX NIC), receivers on nodes 8..15
+    packed = list(range(n)) + [16 * (8 + i) for i in range(n)]
+    # senders spread over nodes 0..7
+    spread = [16 * i for i in range(n)] + [16 * (8 + i) for i in range(n)]
+    r_packed = simulate([job], _place(job, packed)[0])
+    r_spread = simulate([job], _place(job, spread)[0])
+    assert r_packed.total_wait > r_spread.total_wait * 1.5 + 1e-9
+
+
+def test_intra_socket_beats_nic():
+    """Same socket (cache path) is faster than inter-node for small msgs."""
+    job = AppGraph.from_pattern("j", "linear", 2, 1024, 10_000.0, 50,
+                                job_id=0)
+    p_local, _ = _place(job, [0, 1])       # same socket
+    p_remote, _ = _place(job, [0, 16])     # different node
+    r_local = simulate([job], p_local)
+    r_remote = simulate([job], p_remote)
+    assert r_local.workload_finish <= r_remote.workload_finish
+
+
+def test_large_message_bypasses_cache():
+    """>1MB same-socket messages ride memory (cache_msg_cap footnote)."""
+    cluster = ClusterTopology()
+    small = AppGraph.from_pattern("s", "linear", 2, 1 << 19, 1.0, 1, job_id=0)
+    large = AppGraph.from_pattern("l", "linear", 2, 4 << 20, 1.0, 1, job_id=0)
+    for job, bw in ((small, cluster.cache_bw), (large, cluster.mem_bw)):
+        p, _ = _place(job, [0, 1])
+        res = simulate([job], p)
+        expect = job.L.max() / bw
+        np.testing.assert_allclose(res.workload_finish, expect, rtol=1e-6)
+
+
+def test_numa_penalty_applied():
+    cluster = ClusterTopology()
+    job = AppGraph.from_pattern("j", "linear", 2, 4 << 20, 1.0, 1, job_id=0)
+    p_same, _ = _place(job, [0, 1])        # same socket, mem (large msg)
+    p_cross, _ = _place(job, [0, 5])       # cross-socket, same node
+    r_same = simulate([job], p_same)
+    r_cross = simulate([job], p_cross)
+    np.testing.assert_allclose(
+        r_cross.workload_finish / r_same.workload_finish,
+        1.0 + cluster.numa_remote_penalty, rtol=1e-6)
+
+
+def test_tpu_mode_pod_routing():
+    """With pods+ici set, same-pod inter-node is ICI; cross-pod is NIC."""
+    topo = ClusterTopology(n_nodes=4, pods=2, ici_bw=100e9, nic_bw=1e9,
+                           cache_msg_cap=float(1 << 62))
+    job = AppGraph.from_pattern("j", "linear", 2, 1 << 20, 1.0, 1, job_id=0)
+    p_same_pod = Placement(topo)
+    p_same_pod.assign(0, np.array([0, 16]))       # nodes 0,1 = pod 0
+    p_cross_pod = Placement(topo)
+    p_cross_pod.assign(0, np.array([0, 32]))      # nodes 0,2 = pods 0,1
+    r_ici = simulate([job], p_same_pod, topo)
+    r_nic = simulate([job], p_cross_pod, topo)
+    assert r_nic.workload_finish > r_ici.workload_finish * 10
+
+
+def test_metrics_accounting():
+    job0 = AppGraph.from_pattern("a", "linear", 2, 1024, 1.0, 3, job_id=0)
+    job1 = AppGraph.from_pattern("b", "linear", 2, 1024, 1.0, 5, job_id=1)
+    cluster = ClusterTopology()
+    p = Placement(cluster)
+    p.assign(0, np.array([0, 16]))
+    p.assign(1, np.array([32, 48]))
+    res = simulate([job0, job1], p)
+    assert res.n_messages == 8
+    assert set(res.per_job_wait) == {0, 1}
+    assert res.total_job_finish >= res.workload_finish

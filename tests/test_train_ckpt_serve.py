@@ -1,0 +1,239 @@
+"""Training substrate, checkpointing, fault tolerance, serving engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointManager, ElasticReMesher, HeartbeatMonitor,
+                        StragglerTracker, load_checkpoint, save_checkpoint)
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+from repro.train import AdamW, TrainPlan, cosine_schedule, make_train_step
+from repro.train.train_step import compress_tree, default_grad_accum
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="granite-3-2b", lr=1e-2):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    opt = AdamW(lr=lr)
+    return cfg, model, params, opt
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+def test_loss_decreases_on_learnable_data():
+    cfg, model, params, opt = _setup()
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt, TrainPlan()))
+    data = SyntheticLM(cfg, batch=8, seq=32)
+    losses = []
+    for i in range(25):
+        params, state, m = step(params, state, data(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0
+
+
+def test_grad_accum_equivalence():
+    """ga=2 on a batch == ga=1 on the same batch (same grads -> same params)."""
+    cfg, model, params, opt = _setup()
+    data = SyntheticLM(cfg, batch=8, seq=32)
+    batch = data(0)
+    s1 = opt.init(params)
+    s2 = opt.init(params)
+    p1, _, m1 = jax.jit(make_train_step(model, opt, TrainPlan(grad_accum=1)))(
+        params, s1, batch)
+    p2, _, m2 = jax.jit(make_train_step(model, opt, TrainPlan(grad_accum=2)))(
+        params, s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_compression_codec_bounded_error():
+    g = {"a": jnp.linspace(-1, 1, 101), "b": jnp.array([0.5, -0.25])}
+    cg = compress_tree(g)
+    for k in g:
+        err = np.abs(np.asarray(cg[k]) - np.asarray(g[k])).max()
+        scale = float(jnp.abs(g[k]).max()) / 127
+        assert err <= scale * 0.51 + 1e-9
+
+
+def test_compressed_training_still_learns():
+    cfg, model, params, opt = _setup()
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt,
+                                   TrainPlan(compress_grads=True)))
+    data = SyntheticLM(cfg, batch=8, seq=32)
+    losses = []
+    for i in range(20):
+        params, state, m = step(params, state, data(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_clip_norm_engages():
+    cfg, model, params, opt = _setup(lr=1e-3)
+    opt.clip_norm = 1e-6
+    state = opt.init(params)
+    data = SyntheticLM(cfg, batch=4, seq=16)
+    p1, _, m = jax.jit(make_train_step(model, opt, TrainPlan()))(
+        params, state, data(0))
+    # with a tiny clip norm the params barely move
+    delta = max(float(jnp.abs(a - b).max())
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(params)))
+    assert delta < 1e-2
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(110)) == pytest.approx(0.1, rel=1e-3)
+    assert float(lr(60)) < float(lr(20))
+
+
+def test_default_grad_accum_scales():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("internvl2-26b")
+    ga_small = default_grad_accum(cfg, SHAPES["train_4k"], dp=256)
+    ga_big = default_grad_accum(cfg, SHAPES["train_4k"], dp=16)
+    assert ga_big >= ga_small >= 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_keep_k():
+    cfg, model, params, opt = _setup()
+    state = opt.init(params)
+    tree = {"params": params, "opt": state}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3):
+            mgr.save(s, tree)
+        mgr.wait()
+        assert mgr.steps() == [2, 3]
+        step, restored = mgr.restore_latest(tree)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_publish():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "step_00000001.npz")
+        save_checkpoint(path, {"x": jnp.arange(10)})
+        assert os.path.exists(path)
+        assert not os.path.exists(path + ".tmp")
+        out = load_checkpoint(path, {"x": jnp.zeros(10, jnp.int32)})
+        np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(10))
+
+
+def test_training_restart_from_checkpoint():
+    """Kill-and-restore: resumed run reproduces the uninterrupted one."""
+    cfg, model, params, opt = _setup()
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt, TrainPlan()))
+    data = SyntheticLM(cfg, batch=4, seq=16)
+    # uninterrupted
+    p, s = params, state
+    for i in range(6):
+        p, s, _ = step(p, s, data(i))
+    # interrupted at step 3
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        p2, s2 = params, state
+        for i in range(3):
+            p2, s2, _ = step(p2, s2, data(i))
+        mgr.save(3, {"params": p2, "opt": s2}, blocking=True)
+        _, restored = mgr.restore_latest({"params": p2, "opt": s2})
+        p3, s3 = restored["params"], restored["opt"]
+        for i in range(3, 6):
+            p3, s3, _ = step(p3, s3, data(i))
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+def test_heartbeat_sweep():
+    t = [0.0]
+    hb = HeartbeatMonitor(4, deadline_s=10.0, clock=lambda: t[0])
+    t[0] = 5.0
+    hb.beat(0)
+    hb.beat(1)
+    t[0] = 12.0
+    dead = hb.sweep()
+    assert set(dead) == {2, 3}
+    assert hb.alive_hosts() == [0, 1]
+
+
+def test_elastic_remesher_shrinks_data_axis():
+    rm = ElasticReMesher(model_size=16, chips_per_host=8)
+    # 64 hosts = 512 chips -> data 32; lose 3 hosts -> 488 chips -> data 16
+    res = rm.replan(list(range(64)))
+    assert res.data_size == 32 and res.dropped_chips == 0
+    res = rm.replan(list(range(61)))
+    assert res.data_size == 16
+    assert res.dropped_chips == 61 * 8 - 16 * 16
+    assert res.device_order.size == 16 * 16
+
+
+def test_straggler_tracker():
+    st = StragglerTracker(slow_factor=2.0)
+    flags = [st.record(i, dt) for i, dt in
+             enumerate([1.0, 1.1, 0.9, 1.0, 5.0, 1.0])]
+    assert flags == [False, False, False, False, True, False]
+    assert st.flagged_steps == [4]
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def test_serve_engine_completes_requests():
+    cfg, model, params, _ = _setup("qwen3-0.6b")
+    eng = ServeEngine(model, params, batch=3, cache_len=64)
+    reqs = [Request(uid=i, prompt=np.array([1 + i, 2, 3]), max_new_tokens=6)
+            for i in range(7)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) == 6 for r in reqs)
+
+
+def test_serve_greedy_matches_manual_decode():
+    """Engine greedy output == manual prefill+argmax loop (same model)."""
+    cfg, model, params, _ = _setup("granite-3-2b")
+    prompt = np.array([5, 9, 3], np.int32)
+    # manual reference with the same cache length as the engine
+    cache = model.init_cache(1, 32)
+    decode = jax.jit(model.decode_step)
+    tok = int(prompt[0])
+    out = []
+    for t in range(1, 8):
+        logits, cache = decode(params, cache,
+                               jnp.full((1, 1), tok, jnp.int32),
+                               jnp.full((1,), t - 1, jnp.int32))
+        tok = int(prompt[t]) if t < len(prompt) else int(np.argmax(logits[0]))
+        if t >= len(prompt):
+            out.append(tok)
+    eng = ServeEngine(model, params, batch=1, cache_len=32)
+    r = Request(uid=0, prompt=prompt, max_new_tokens=len(out))
+    eng.submit(r)
+    eng.run()
+    assert r.output[:len(out)] == out

@@ -1,0 +1,49 @@
+"""Workload tables match the paper (Tables 2-9)."""
+from repro.core.workloads import (ALL_WORKLOADS, REAL, SYNTHETIC,
+                                  synt_workload_1, synt_workload_3,
+                                  real_workload_1, real_workload_4)
+
+KB, MB = 1 << 10, 1 << 20
+
+
+def test_synt1_table2():
+    jobs = synt_workload_1()
+    assert len(jobs) == 4
+    assert all(j.n_procs == 64 for j in jobs)
+    assert all(j.max_length == 64 * KB for j in jobs)
+    assert all(j.lam.max() == 100.0 for j in jobs)
+    assert all(j.cnt.max() == 2000 for j in jobs)
+
+
+def test_synt3_table4_mixed_lengths():
+    jobs = synt_workload_3()
+    assert len(jobs) == 8
+    assert all(j.n_procs == 32 for j in jobs)
+    lengths = sorted({j.max_length for j in jobs})
+    assert lengths == [64 * KB, 2 * MB]
+    assert sum(j.size_class() == "large" for j in jobs) == 4
+
+
+def test_real1_table6():
+    jobs = real_workload_1()
+    assert [j.n_procs for j in jobs] == [25, 32, 32, 16, 16, 32, 8, 25, 16]
+    # IS/FT jobs are all-to-all dominated -> every proc adjacent to all
+    is_job = jobs[1]
+    assert is_job.adj_max == is_job.n_procs - 1
+
+
+def test_real4_is_light():
+    """Table 9 workload must be light: EP nearly silent, no IS/FT."""
+    jobs = real_workload_4()
+    assert len(jobs) == 4
+    total_demand = sum(j.demand.sum() for j in jobs)
+    heavy = sum(j.demand.sum() for j in ALL_WORKLOADS["real_workload_1"]())
+    assert total_demand < heavy / 10
+
+
+def test_registry_complete():
+    assert len(SYNTHETIC) == 4 and len(REAL) == 4
+    assert len(ALL_WORKLOADS) == 8
+    for fn in ALL_WORKLOADS.values():
+        jobs = fn()
+        assert len({j.job_id for j in jobs}) == len(jobs)
