@@ -1,0 +1,123 @@
+"""Online-scheduler strategy shoot-out under dynamic arrival traces.
+
+Extends the paper's static Tables 2–5 comparison to the regime it was
+written for but never measured: jobs arriving/departing on a shared
+cluster (DESIGN.md §3). For each mapping strategy the same Poisson trace
+is replayed through ``repro.sched.FleetScheduler`` and the run is scored
+on makespan, total queue wait, total simulated message wait and the p99
+of per-node NIC utilisation.
+
+    PYTHONPATH=src python benchmarks/sched_bench.py --trace table4_poisson
+    PYTHONPATH=src python benchmarks/sched_bench.py --trace serve_fleet \
+        --strategies new new_tpu cyclic
+
+Results are emitted as JSON on stdout (and to --out when given).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.sched import FleetScheduler, TRACES, get_trace
+
+DEFAULT_STRATEGIES = ("blocked", "cyclic", "drb", "new")
+
+
+def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
+              rate: float | None = None, n_arrivals: int | None = None,
+              seed: int = 0, remap_interval: float | None = 5.0,
+              util_threshold: float = 0.75) -> dict:
+    kwargs = {"seed": seed}
+    if rate is not None:
+        kwargs["rate"] = rate
+    if n_arrivals is not None:
+        kwargs["n_arrivals"] = n_arrivals
+    results: dict[str, dict] = {}
+    count_scale = None
+    for strategy in strategies:
+        spec = get_trace(trace_name, **kwargs)       # fresh graphs per run
+        count_scale = spec.count_scale
+        sched = FleetScheduler(
+            spec.cluster, strategy,
+            remap_interval=remap_interval,
+            util_threshold=util_threshold,
+            state_bytes_per_proc=spec.state_bytes_per_proc,
+            count_scale=spec.count_scale)
+        sched.submit_trace(spec.arrivals)
+        stats = sched.run()
+        sched.check_invariants()                     # fleet accounting intact
+        results[strategy] = stats.to_dict()
+
+    def wait(s: str) -> float:
+        return results[s]["total_msg_wait"]
+
+    comparison = {}
+    if "new" in results:
+        for base in ("blocked", "cyclic", "drb"):
+            if base in results and wait(base) > 0:
+                comparison[f"new_vs_{base}_msg_wait_gain"] = round(
+                    1.0 - wait("new") / wait(base), 4)
+        comparison["new_beats_blocked_and_cyclic"] = bool(
+            "blocked" in results and "cyclic" in results
+            and wait("new") < wait("blocked") and wait("new") < wait("cyclic"))
+    return {
+        "trace": trace_name,
+        "params": {"seed": seed, "rate": rate, "n_arrivals": n_arrivals,
+                   "remap_interval": remap_interval,
+                   "util_threshold": util_threshold,
+                   "count_scale": count_scale},
+        "strategies": results,
+        "comparison": comparison,
+    }
+
+
+def _print_table(report: dict) -> None:
+    rows = report["strategies"]
+    print(f"# trace={report['trace']}  "
+          f"params={report['params']}", file=sys.stderr)
+    hdr = (f"{'strategy':10s} {'makespan(s)':>12s} {'queue-wait(s)':>14s} "
+           f"{'msg-wait(s)':>14s} {'nic-p99':>8s} {'remaps':>7s}")
+    print(hdr, file=sys.stderr)
+    for name, s in rows.items():
+        print(f"{name:10s} {s['makespan']:12.2f} {s['total_queue_wait']:14.2f} "
+              f"{s['total_msg_wait']:14.1f} {s['nic_p99_util']:8.3f} "
+              f"{s['n_remap_commits']:3d}/{s['n_remap_rejects']:<3d}",
+              file=sys.stderr)
+    for k, v in report["comparison"].items():
+        print(f"  {k}: {v}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="table4_poisson",
+                    choices=sorted(TRACES), help="named arrival trace")
+    ap.add_argument("--strategies", nargs="+", default=list(DEFAULT_STRATEGIES))
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate, jobs/s (trace default if unset)")
+    ap.add_argument("--arrivals", type=int, default=24,
+                    help="number of job arrivals in the trace")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--remap-interval", type=float, default=5.0,
+                    help="seconds between contention-aware remap passes")
+    ap.add_argument("--no-remap", action="store_true",
+                    help="disable the periodic remap pass")
+    ap.add_argument("--util-threshold", type=float, default=0.75)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    report = run_trace(
+        args.trace, tuple(args.strategies),
+        rate=args.rate, n_arrivals=args.arrivals, seed=args.seed,
+        remap_interval=None if args.no_remap else args.remap_interval,
+        util_threshold=args.util_threshold)
+    _print_table(report)
+    text = json.dumps(report, indent=1, sort_keys=True)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()

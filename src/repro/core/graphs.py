@@ -218,6 +218,16 @@ class Placement:
     def assign(self, job_id: int, proc_to_core: np.ndarray) -> None:
         self.assignments[job_id] = np.asarray(proc_to_core, dtype=np.int64)
 
+    def remove(self, job_id: int) -> np.ndarray:
+        """Drop one job's assignment (departure); returns its cores."""
+        if job_id not in self.assignments:
+            raise KeyError(f"job {job_id} not placed")
+        return self.assignments.pop(job_id)
+
+    def copy(self) -> "Placement":
+        """Shallow clone — shares core arrays, independent assignment dict."""
+        return Placement(self.cluster, dict(self.assignments))
+
     def occupied(self) -> np.ndarray:
         used = np.zeros(self.cluster.n_cores, dtype=bool)
         for cores in self.assignments.values():
@@ -244,6 +254,21 @@ class FreeCoreTracker:
         self.used = np.zeros(cluster.n_cores, dtype=bool)
         if occupied is not None:
             self.used |= occupied
+
+    @classmethod
+    def from_placement(cls, placement: Placement) -> "FreeCoreTracker":
+        """Tracker whose used set mirrors an existing placement."""
+        return cls(placement.cluster, occupied=placement.occupied())
+
+    # -- snapshot / restore (scheduler remap trials) ---------------------------
+    def snapshot(self) -> np.ndarray:
+        """Copy of the used mask; pass back to :meth:`restore` to roll back."""
+        return self.used.copy()
+
+    def restore(self, snap: np.ndarray) -> None:
+        if snap.shape != self.used.shape:
+            raise ValueError("snapshot shape mismatch")
+        self.used = snap.copy()
 
     # -- queries -------------------------------------------------------------
     def free_in_node(self, node: int) -> int:
@@ -297,6 +322,28 @@ class FreeCoreTracker:
                     self.used[lo + slot] = True
                     return lo + slot
         raise RuntimeError(f"node {node} has no free core")
+
+    def take_cores(self, cores: np.ndarray) -> None:
+        """Claim specific global core ids (restore a known placement)."""
+        cores = np.asarray(cores, dtype=np.int64)
+        if cores.size and (cores.min() < 0 or cores.max() >= self.cluster.n_cores):
+            raise ValueError("core id out of range")
+        if self.used[cores].any():
+            raise ValueError("core already in use")
+        self.used[cores] = True
+
+    def release_cores(self, cores: np.ndarray) -> None:
+        """Return a departed job's cores to the free pool.
+
+        Double-release is an accounting bug, so releasing an already-free
+        core raises rather than silently passing.
+        """
+        cores = np.asarray(cores, dtype=np.int64)
+        if cores.size and (cores.min() < 0 or cores.max() >= self.cluster.n_cores):
+            raise ValueError("core id out of range")
+        if not self.used[cores].all():
+            raise ValueError("releasing a core that is not in use")
+        self.used[cores] = False
 
 
 def workload_total_procs(jobs: Sequence[AppGraph]) -> int:

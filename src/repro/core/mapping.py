@@ -6,35 +6,45 @@ comparison methods it evaluates against: ``blocked``, ``cyclic`` and ``drb``
 
 Every strategy has the same signature::
 
-    placement = strategy(jobs, cluster)
+    placement = strategy(jobs, cluster, tracker=None)
 
 where ``jobs`` is a sequence of :class:`~repro.core.graphs.AppGraph` and the
-result maps each job's process ranks to global core ids.
+result maps each job's process ranks to global core ids. ``tracker`` is an
+optional pre-fragmented :class:`~repro.core.graphs.FreeCoreTracker` — the
+online scheduler (``repro.sched``) passes the live fleet state so jobs land
+in whatever free cores remain after earlier arrivals/departures; omitting it
+keeps the paper's batch semantics (place onto an empty cluster). Strategies
+MUTATE the tracker they are given (cores are claimed as they are assigned).
 """
 from __future__ import annotations
 
 import math
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from .graphs import AppGraph, ClusterTopology, FreeCoreTracker, Placement
 
-Strategy = Callable[[Sequence[AppGraph], ClusterTopology], Placement]
+Strategy = Callable[..., Placement]
 
 
 # ---------------------------------------------------------------------------
 # Blocked — fill a node completely, then move to the next (paper sec. 3)
 # ---------------------------------------------------------------------------
-def blocked(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+def blocked(jobs: Sequence[AppGraph], cluster: ClusterTopology,
+            tracker: Optional[FreeCoreTracker] = None) -> Placement:
     placement = Placement(cluster)
-    tracker = FreeCoreTracker(cluster)
+    tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
     for job in jobs:
         cores = np.empty(job.n_procs, dtype=np.int64)
         node = 0
         for p in range(job.n_procs):
+            tries = 0
             while tracker.free_in_node(node) == 0:
                 node = (node + 1) % cluster.n_nodes
+                tries += 1
+                if tries > cluster.n_nodes:
+                    raise RuntimeError("cluster full")
             cores[p] = tracker.take_core(node, socket=None)
         placement.assign(job.job_id, cores)
     return placement
@@ -43,9 +53,10 @@ def blocked(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
 # ---------------------------------------------------------------------------
 # Cyclic — round-robin processes over nodes (max nodes, min cores per node)
 # ---------------------------------------------------------------------------
-def cyclic(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+def cyclic(jobs: Sequence[AppGraph], cluster: ClusterTopology,
+           tracker: Optional[FreeCoreTracker] = None) -> Placement:
     placement = Placement(cluster)
-    tracker = FreeCoreTracker(cluster)
+    tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
     node = 0
     for job in jobs:
         cores = np.empty(job.n_procs, dtype=np.int64)
@@ -130,9 +141,10 @@ def _drb_assign(procs: np.ndarray, cores: np.ndarray, weights: np.ndarray,
     _drb_assign(procs_b, cores_b, weights, cluster, out)
 
 
-def drb(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+def drb(jobs: Sequence[AppGraph], cluster: ClusterTopology,
+        tracker: Optional[FreeCoreTracker] = None) -> Placement:
     placement = Placement(cluster)
-    tracker = FreeCoreTracker(cluster)
+    tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
     for job in jobs:
         # DRB packs each job into the most compact free region (locality first)
         free = np.where(~tracker.used)[0]
@@ -221,10 +233,11 @@ def _map_one_job(job: AppGraph, tracker: FreeCoreTracker,
     return cores
 
 
-def new_mapping(jobs: Sequence[AppGraph], cluster: ClusterTopology) -> Placement:
+def new_mapping(jobs: Sequence[AppGraph], cluster: ClusterTopology,
+                tracker: Optional[FreeCoreTracker] = None) -> Placement:
     """The paper's strategy: size classes -> job order -> thresholded placement."""
     placement = Placement(cluster)
-    tracker = FreeCoreTracker(cluster)
+    tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
     for size_class in ("large", "medium", "small"):  # steps 1, 4, 6
         pool = [j for j in jobs if j.size_class() == size_class]
         for job in _sorted_jobs(pool):  # steps 2 + 3.1

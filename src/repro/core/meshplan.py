@@ -126,13 +126,18 @@ def _nic_balance_pass(cores: np.ndarray, ag: AppGraph,
     return cores
 
 
-def new_mapping_tpu(jobs, topo: ClusterTopology) -> Placement:
-    """Paper Fig.1 re-targeted to the TPU hierarchy (see block comment)."""
+def new_mapping_tpu(jobs, topo: ClusterTopology,
+                    tracker: Optional["FreeCoreTracker"] = None) -> Placement:
+    """Paper Fig.1 re-targeted to the TPU hierarchy (see block comment).
+
+    ``tracker`` (optional) is a pre-fragmented free-core view — the online
+    scheduler passes live fleet state; default is an empty fleet.
+    """
     from .graphs import FreeCoreTracker
     from .mapping import _sorted_jobs
 
     placement = Placement(topo)
-    tracker = FreeCoreTracker(topo)
+    tracker = tracker if tracker is not None else FreeCoreTracker(topo)
     chips_per_pod = topo.nodes_per_pod * topo.cores_per_node
     for size_class in ("large", "medium", "small"):
         pool = [j for j in jobs if j.size_class() == size_class]
@@ -253,12 +258,44 @@ class JobSpec:
 
 def place_jobs(jobs: Sequence[JobSpec], topo: ClusterTopology,
                strategy: str = "new",
-               steps_per_sec: float = 1.0) -> tuple[Placement, list[AppGraph]]:
+               steps_per_sec: float = 1.0,
+               placement: Placement | None = None,
+               tracker: "FreeCoreTracker | None" = None,
+               ) -> tuple[Placement, list[AppGraph]]:
+    """Place a batch of jobs; optionally incrementally on a live fleet.
+
+    Batch mode (default): jobs are (re-)numbered 0..n-1 and placed onto an
+    empty fleet — the paper's one-shot scenario.
+
+    Incremental mode: pass the existing ``placement`` (and, optionally, a
+    ``tracker`` mirroring it — derived from the placement when omitted).
+    New jobs receive ids after the current maximum and are placed into the
+    remaining fragmented free cores; existing assignments are untouched.
+    """
+    from .graphs import FreeCoreTracker
+
+    if placement is None:
+        placement = Placement(topo)
+        next_id = 0
+    else:
+        next_id = max(placement.assignments, default=-1) + 1
+    if tracker is None:
+        tracker = FreeCoreTracker.from_placement(placement)
     graphs = []
     for i, j in enumerate(jobs):
-        j.job_id = i
+        j.job_id = next_id + i
         graphs.append(j.appgraph(steps_per_sec))
-    placement = TPU_STRATEGIES[strategy](graphs, topo)
+    # strategies claim cores as they go and can raise mid-batch (fleet
+    # full) — roll the caller's tracker back so it stays in sync with the
+    # placement instead of leaking the partial batch's cores
+    snap = tracker.snapshot()
+    try:
+        new_placement = TPU_STRATEGIES[strategy](graphs, topo, tracker)
+    except Exception:
+        tracker.restore(snap)
+        raise
+    for jid, cores in new_placement.assignments.items():
+        placement.assign(jid, cores)
     return placement, graphs
 
 

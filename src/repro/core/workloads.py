@@ -7,10 +7,18 @@ NPB 3 (FT/IS are alltoall-dominated; CG/BT/SP/LU are neighbour exchanges;
 MG mixes neighbour + small reductions; EP is almost silent). Absolute
 fidelity to NPB byte counts is secondary — the workloads must reproduce
 the paper's heavy/medium/light spread, which these do.
+
+Arrival traces (``Arrival`` / ``poisson_trace``) extend the static tables
+to the dynamic regime the online scheduler (``repro.sched``) targets: the
+same job mixes, but arriving over time as a Poisson process instead of
+being placed once on an empty cluster. See DESIGN.md §3.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
 
 from .graphs import AppGraph
 
@@ -143,6 +151,71 @@ def real_workload_4() -> list[AppGraph]:
     """Table 9 — light communication (EP/MG/CG/SP only)."""
     return _real([(25, "SP", "C"), (32, "CG", "C"), (32, "EP", "C"),
                   (32, "MG", "C")])
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces — dynamic job streams for the online scheduler
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One timestamped job arrival in a scheduler trace."""
+
+    time: float          # seconds (simulated clock)
+    graph: AppGraph
+
+
+def _respawn(template: AppGraph, job_id: int) -> AppGraph:
+    """Fresh AppGraph instance of a template job with a unique id.
+
+    Traffic matrices are never mutated downstream, so they are shared.
+    """
+    return AppGraph(name=f"{template.name}@{job_id}", L=template.L,
+                    lam=template.lam, cnt=template.cnt, job_id=job_id)
+
+
+def poisson_trace(mix: Sequence[AppGraph], rate: float, n_arrivals: int,
+                  seed: int = 0, shuffle: bool = True) -> list[Arrival]:
+    """Poisson arrival stream drawn from a job mix.
+
+    ``mix`` supplies the job *templates* (e.g. a Table 2–5 workload); each
+    arrival clones one with a fresh ``job_id`` (= arrival index). Inter-
+    arrival gaps are Exponential(``rate``) — ``rate`` is jobs/second of
+    simulated time. With ``shuffle`` the mix order is randomised per cycle
+    (every template appears once per len(mix) arrivals, like the paper's
+    tables); without it templates cycle in table order. Deterministic for
+    a given seed.
+    """
+    if not mix:
+        raise ValueError("empty job mix")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_arrivals)
+    times = np.cumsum(gaps)
+    order: list[int] = []
+    while len(order) < n_arrivals:
+        cycle = np.arange(len(mix))
+        if shuffle:
+            rng.shuffle(cycle)
+        order.extend(int(c) for c in cycle)
+    return [Arrival(time=float(times[k]), graph=_respawn(mix[order[k]], k))
+            for k in range(n_arrivals)]
+
+
+def table_poisson_trace(table: int, rate: float = 0.5, n_arrivals: int = 16,
+                        seed: int = 0) -> list[Arrival]:
+    """Poisson trace over one of the paper's synthetic tables (2–5)."""
+    factories: dict[int, Callable[[], list[AppGraph]]] = {
+        2: synt_workload_1, 3: synt_workload_2,
+        4: synt_workload_3, 5: synt_workload_4,
+    }
+    if table not in factories:
+        raise ValueError(f"table must be one of {sorted(factories)}")
+    return poisson_trace(factories[table](), rate, n_arrivals, seed=seed)
+
+
+def npb_poisson_trace(rate: float = 0.5, n_arrivals: int = 16,
+                      seed: int = 0) -> list[Arrival]:
+    """Poisson trace over the Table-6 NPB mix (communication intensive)."""
+    return poisson_trace(real_workload_1(), rate, n_arrivals, seed=seed)
 
 
 SYNTHETIC = {

@@ -1,0 +1,19 @@
+"""Online fleet scheduling — dynamic multi-tenant placement (DESIGN.md §3).
+
+Public surface:
+  events     — Event / EventQueue discrete-event core
+  scheduler  — FleetScheduler, FleetStats, RemapDecision
+  traces     — named arrival scenarios (paper tables + serving fleet)
+"""
+from .events import ARRIVAL, DEPARTURE, REMAP, Event, EventQueue
+from .scheduler import (FleetScheduler, FleetStats, RemapDecision, SchedJob,
+                        SchedulerInvariantError, projected_nic_loads,
+                        resolve_strategy)
+from .traces import TRACES, TraceSpec, get_trace
+
+__all__ = [
+    "ARRIVAL", "DEPARTURE", "REMAP", "Event", "EventQueue",
+    "FleetScheduler", "FleetStats", "RemapDecision", "SchedJob",
+    "SchedulerInvariantError", "projected_nic_loads", "resolve_strategy",
+    "TRACES", "TraceSpec", "get_trace",
+]

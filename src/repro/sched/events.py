@@ -1,0 +1,57 @@
+"""Event machinery for the online fleet scheduler.
+
+A deliberately tiny discrete-event core: three event kinds pushed onto a
+single time-ordered heap. Ties are broken by a monotonically increasing
+sequence number, then by kind priority so that at equal timestamps
+departures free cores *before* arrivals try to claim them and remap
+passes observe a settled fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional
+
+ARRIVAL = "arrival"
+DEPARTURE = "departure"
+REMAP = "remap"
+
+# at equal timestamps: release cores, then admit, then consider remapping
+_KIND_PRIORITY = {DEPARTURE: 0, ARRIVAL: 1, REMAP: 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    kind: str            # ARRIVAL | DEPARTURE | REMAP
+    job_id: int = -1     # -1 for REMAP ticks
+
+    def sort_key(self, seq: int) -> tuple:
+        return (self.time, _KIND_PRIORITY[self.kind], seq)
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, kind priority, insertion seq)."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[tuple, Event]] = []
+        self._seq = itertools.count()
+
+    def push(self, event: Event) -> None:
+        heapq.heappush(self._heap, (event.sort_key(next(self._seq)), event))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[1]
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0][1] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def count(self, kind: str) -> int:
+        return sum(1 for _, e in self._heap if e.kind == kind)

@@ -1,0 +1,437 @@
+"""Online fleet scheduler — contention-aware placement under churn.
+
+The paper evaluates its mapping strategy on a *static* batch of jobs
+placed once on an empty cluster. Real clusters (and the ROADMAP's serving
+fleet) are dynamic: jobs arrive, run, and depart, leaving fragmented
+free-core pools. This module turns the static machinery into an
+event-driven scheduler (DESIGN.md §3):
+
+* **Arrivals** are placed immediately with any of the mapping strategies
+  (``blocked`` / ``cyclic`` / ``drb`` / ``new`` / ``new_tpu``) against the
+  *current fragmented* :class:`~repro.core.graphs.FreeCoreTracker` — the
+  strategies were extended to accept a live tracker instead of assuming an
+  empty cluster. Jobs that do not fit wait in a FIFO queue.
+* **Departures** are driven by the queueing simulator
+  (``repro.core.simulator``): at admission the live workload is simulated
+  and the new job's simulated finish time becomes its departure timestamp
+  — the simulator is the scheduler's clock.
+* **Remap passes** run periodically: when the simulator's projected peak
+  channel (NIC) utilisation exceeds a threshold, the worst-contended live
+  job (largest simulated message wait) is trially re-placed into the
+  current free pool. The move is committed only if the projected wait
+  reduction exceeds an explicit migration cost — process state moved over
+  the NIC, ``state_bytes_per_proc x procs-that-change-node / nic_bw``.
+
+Determinism: no wall clock, no unseeded randomness — identical traces
+yield identical schedules, which the tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
+                           Placement)
+from ..core.mapping import STRATEGIES
+from ..core.simulator import simulate
+from ..core.workloads import Arrival
+from .events import ARRIVAL, DEPARTURE, REMAP, Event, EventQueue
+
+MB = 1 << 20
+
+StrategyLike = Union[str, Callable[..., Placement]]
+
+
+class SchedulerInvariantError(RuntimeError):
+    """Core accounting went wrong (leak / double-assignment / drift)."""
+
+
+def resolve_strategy(strategy: StrategyLike) -> Callable[..., Placement]:
+    """Name -> strategy fn; accepts the TPU-adapted strategy and callables."""
+    if callable(strategy):
+        return strategy
+    if strategy in STRATEGIES:
+        return STRATEGIES[strategy]
+    # new_tpu lives in meshplan (pulls in configs) — import lazily
+    from ..core.meshplan import TPU_STRATEGIES
+    if strategy in TPU_STRATEGIES:
+        return TPU_STRATEGIES[strategy]
+    raise KeyError(f"unknown strategy {strategy!r}; known: "
+                   f"{sorted(STRATEGIES)} + ['new_tpu']")
+
+
+def projected_nic_loads(graphs: Sequence[AppGraph], placement: Placement,
+                        cluster: ClusterTopology) -> np.ndarray:
+    """Per-node NIC load (bytes/s, TX+RX) implied by current demand.
+
+    Paper mode: every inter-node byte crosses a NIC. TPU mode
+    (``ici_bw`` set): only pod-crossing bytes do — same routing split as
+    the simulator.
+    """
+    nic = np.zeros(cluster.n_nodes)
+    tpu_mode = cluster.ici_bw is not None and cluster.pods > 1
+    for g in graphs:
+        cores = placement.assignments[g.job_id]
+        demand = g.demand
+        src, dst = np.nonzero(demand)
+        s_core, r_core = cores[src], cores[dst]
+        s_node, r_node = cluster.node_of(s_core), cluster.node_of(r_core)
+        if tpu_mode:
+            cross = cluster.pod_of(s_core) != cluster.pod_of(r_core)
+        else:
+            cross = s_node != r_node
+        vals = demand[src, dst][cross]
+        np.add.at(nic, s_node[cross], vals)
+        np.add.at(nic, r_node[cross], vals)
+    return nic
+
+
+# ---------------------------------------------------------------------------
+# Records
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SchedJob:
+    """One job's lifecycle inside the scheduler."""
+
+    job_id: int
+    graph: AppGraph
+    arrival: float
+    state_bytes_per_proc: float
+    placed_at: Optional[float] = None
+    cores: Optional[np.ndarray] = None
+    departure: Optional[float] = None
+    msg_wait: float = 0.0            # simulated message wait at admission (s)
+    n_migrations: int = 0
+    migrated_bytes: float = 0.0
+
+    @property
+    def queue_wait(self) -> float:
+        return (self.placed_at - self.arrival) if self.placed_at is not None else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapDecision:
+    """One remap-pass verdict (kept for inspection and tests)."""
+
+    time: float
+    job_id: int
+    wait_gain: float           # projected total-wait reduction (s)
+    bytes_moved: float         # migration payload over the NIC
+    migration_time: float      # bytes_moved / nic_bw (s)
+    committed: bool
+
+
+@dataclasses.dataclass
+class FleetStats:
+    """Aggregate outcome of one scheduler run."""
+
+    n_jobs: int
+    makespan: float                  # last departure (s, sim clock)
+    total_queue_wait: float          # sum over jobs of (placed_at - arrival)
+    total_msg_wait: float            # sum of simulated per-job message waits
+    nic_p99_util: float              # p99 of per-node NIC utilisation samples
+    peak_sim_util: float             # max simulator server utilisation seen
+    n_remap_commits: int
+    n_remap_rejects: int
+    migrated_bytes: float
+    per_job: dict[int, dict]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+class FleetScheduler:
+    """Event-driven multi-job scheduler over a shared cluster/fleet.
+
+    Low-level API (direct, used by property tests): :meth:`admit` /
+    :meth:`depart` mutate the fleet immediately and keep the free-core
+    accounting consistent. High-level API: :meth:`submit` /
+    :meth:`submit_trace` enqueue timestamped arrivals and :meth:`run`
+    plays the event loop, with departures scheduled from simulated job
+    finish times and optional periodic remap passes.
+    """
+
+    def __init__(self, cluster: ClusterTopology,
+                 strategy: StrategyLike = "new", *,
+                 remap_interval: Optional[float] = None,
+                 util_threshold: float = 0.75,
+                 migration_cost_factor: float = 1.0,
+                 max_migrations_per_job: int = 1,
+                 state_bytes_per_proc: float = 64 * MB,
+                 count_scale: float = 0.02):
+        self.cluster = cluster
+        self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
+        self._strategy = resolve_strategy(strategy)
+        self.tracker = FreeCoreTracker(cluster)
+        self.placement = Placement(cluster)
+        self.remap_interval = remap_interval
+        self.util_threshold = util_threshold
+        self.migration_cost_factor = migration_cost_factor
+        self.max_migrations_per_job = max_migrations_per_job
+        self.state_bytes_per_proc = state_bytes_per_proc
+        self.count_scale = count_scale
+
+        self.now = 0.0
+        self.live: dict[int, SchedJob] = {}
+        self.done: dict[int, SchedJob] = {}
+        self.pending: list[int] = []          # FIFO of queued job_ids
+        self.jobs: dict[int, SchedJob] = {}   # every job ever submitted
+        self.events = EventQueue()
+        self.decisions: list[RemapDecision] = []
+        self._util_samples: list[float] = []      # sim peak-server utilisation
+        self._nic_util_samples: list[np.ndarray] = []  # per-node NIC util
+        self._remap_scheduled = False
+
+    # -- low-level fleet mutations (immediate) -------------------------------
+    def admit(self, graph: AppGraph, now: Optional[float] = None,
+              state_bytes_per_proc: Optional[float] = None) -> SchedJob:
+        """Place one job right now against the fragmented free pool.
+
+        Raises ``RuntimeError`` if the job does not fit — callers that want
+        queueing use :meth:`submit` + :meth:`run`.
+        """
+        now = self.now if now is None else now
+        if graph.n_procs > self.cluster.n_cores:
+            raise ValueError(f"job {graph.job_id} needs {graph.n_procs} cores; "
+                             f"cluster has {self.cluster.n_cores}")
+        if graph.n_procs > self.tracker.total_free():
+            raise RuntimeError(f"job {graph.job_id} does not fit "
+                               f"({graph.n_procs} > {self.tracker.total_free()} free)")
+        job = self.jobs.get(graph.job_id)
+        if job is None:
+            job = SchedJob(job_id=graph.job_id, graph=graph, arrival=now,
+                           state_bytes_per_proc=state_bytes_per_proc
+                           if state_bytes_per_proc is not None
+                           else self.state_bytes_per_proc)
+            self.jobs[job.job_id] = job
+        if job.job_id in self.live:
+            raise ValueError(f"job {job.job_id} already live")
+        local = self._strategy([graph], self.cluster, self.tracker)
+        cores = local.assignments[graph.job_id]
+        self.placement.assign(job.job_id, cores)
+        job.cores = cores
+        job.placed_at = now
+        self.live[job.job_id] = job
+        return job
+
+    def depart(self, job_id: int, now: Optional[float] = None) -> SchedJob:
+        """Release a live job's cores back to the free pool."""
+        now = self.now if now is None else now
+        job = self.live.pop(job_id, None)
+        if job is None:
+            raise KeyError(f"job {job_id} is not live")
+        cores = self.placement.remove(job_id)
+        self.tracker.release_cores(cores)
+        job.departure = now if job.departure is None else job.departure
+        self.done[job_id] = job
+        return job
+
+    # -- high-level event API --------------------------------------------------
+    def submit(self, graph: AppGraph, at: float = 0.0,
+               state_bytes_per_proc: Optional[float] = None) -> None:
+        """Enqueue a timestamped arrival for :meth:`run`."""
+        if graph.n_procs > self.cluster.n_cores:
+            raise ValueError(f"job {graph.job_id} needs {graph.n_procs} cores; "
+                             f"cluster has {self.cluster.n_cores}")
+        if graph.job_id in self.jobs:
+            raise ValueError(f"duplicate job_id {graph.job_id}")
+        self.jobs[graph.job_id] = SchedJob(
+            job_id=graph.job_id, graph=graph, arrival=at,
+            state_bytes_per_proc=state_bytes_per_proc
+            if state_bytes_per_proc is not None else self.state_bytes_per_proc)
+        self.events.push(Event(time=at, kind=ARRIVAL, job_id=graph.job_id))
+
+    def submit_trace(self, trace: Iterable[Arrival]) -> None:
+        for a in trace:
+            self.submit(a.graph, at=a.time)
+
+    def run(self) -> FleetStats:
+        """Play all events; returns aggregate fleet statistics."""
+        while self.events:
+            ev = self.events.pop()
+            self.now = max(self.now, ev.time)
+            if ev.kind == ARRIVAL:
+                self._handle_arrival(self.jobs[ev.job_id])
+            elif ev.kind == DEPARTURE:
+                self._handle_departure(ev)
+            elif ev.kind == REMAP:
+                self._remap_scheduled = False
+                self._remap_pass()
+                self._maybe_schedule_remap()
+            self._sample_nic_util()
+        return self.stats()
+
+    # -- event handlers ----------------------------------------------------------
+    def _handle_arrival(self, job: SchedJob) -> None:
+        # strict FIFO: while anyone is queued, later arrivals queue behind
+        # them (head-of-line blocking) instead of jumping ahead
+        if self.pending or job.graph.n_procs > self.tracker.total_free():
+            self.pending.append(job.job_id)
+            return
+        self._place_and_clock(job)
+        self._maybe_schedule_remap()
+
+    def _handle_departure(self, ev: Event) -> None:
+        job = self.live.get(ev.job_id)
+        # stale event: job was remapped (departure shifted) — the fresh
+        # event is already queued; or the job already departed.
+        if job is None or job.departure is None or abs(job.departure - ev.time) > 1e-9:
+            return
+        self.depart(ev.job_id, now=self.now)
+        # departures free cores — drain the FIFO head while it fits
+        while self.pending:
+            head = self.jobs[self.pending[0]]
+            if head.graph.n_procs > self.tracker.total_free():
+                break
+            self.pending.pop(0)
+            self._place_and_clock(head)
+
+    def _place_and_clock(self, job: SchedJob) -> None:
+        """Admit + derive the departure time from the queueing simulator."""
+        self.admit(job.graph, now=self.now)
+        res = simulate(self._live_graphs(), self.placement, self.cluster,
+                       count_scale=self.count_scale)
+        duration = max(res.job_finish[job.job_id], 1e-9)
+        job.msg_wait = res.per_job_wait[job.job_id]
+        job.departure = self.now + duration
+        self._util_samples.append(res.max_server_utilisation)
+        self.events.push(Event(time=job.departure, kind=DEPARTURE,
+                               job_id=job.job_id))
+
+    # -- contention-aware remap -----------------------------------------------
+    def _maybe_schedule_remap(self) -> None:
+        if self.remap_interval is None or self._remap_scheduled:
+            return
+        # only worth ticking while jobs are live or still queued/arriving
+        if self.live or self.pending or self.events.count(ARRIVAL):
+            self.events.push(Event(time=self.now + self.remap_interval,
+                                   kind=REMAP))
+            self._remap_scheduled = True
+
+    def _remap_pass(self) -> None:
+        """Re-place the worst-contended job when projected utilisation is
+        over threshold AND the wait reduction pays for the migration."""
+        if len(self.live) < 2:
+            return
+        live = self._live_graphs()
+        res = simulate(live, self.placement, self.cluster,
+                       count_scale=self.count_scale)
+        self._util_samples.append(res.max_server_utilisation)
+        if res.max_server_utilisation < self.util_threshold:
+            return
+        # worst-contended job still under its migration budget (thrash guard)
+        movable = [j for j in res.per_job_wait
+                   if self.live[j].n_migrations < self.max_migrations_per_job]
+        if not movable:
+            return
+        worst_id = max(movable, key=lambda j: (res.per_job_wait[j], j))
+        job = self.live[worst_id]
+        snap = self.tracker.snapshot()
+        old_cores = job.cores
+        self.tracker.release_cores(old_cores)
+        try:
+            local = self._strategy([job.graph], self.cluster, self.tracker)
+        except RuntimeError:
+            self.tracker.restore(snap)
+            return
+        new_cores = local.assignments[worst_id]
+        moved = int((self.cluster.node_of(new_cores)
+                     != self.cluster.node_of(old_cores)).sum())
+        bytes_moved = moved * job.state_bytes_per_proc
+        migration_time = bytes_moved / self.cluster.nic_bw
+        trial = self.placement.copy()
+        trial.assign(worst_id, new_cores)
+        res_new = simulate(live, trial, self.cluster,
+                           count_scale=self.count_scale)
+        gain = res.total_wait - res_new.total_wait
+        commit = moved > 0 and gain > migration_time * self.migration_cost_factor
+        self.decisions.append(RemapDecision(
+            time=self.now, job_id=worst_id, wait_gain=gain,
+            bytes_moved=bytes_moved, migration_time=migration_time,
+            committed=commit))
+        if not commit:
+            self.tracker.restore(snap)
+            return
+        self.placement.assign(worst_id, new_cores)
+        job.cores = new_cores
+        job.n_migrations += 1
+        job.migrated_bytes += bytes_moved
+        # refresh every live job's projected message wait so committed
+        # gains (and any collateral damage) show up in the final metrics
+        for jid, w in res_new.per_job_wait.items():
+            self.live[jid].msg_wait = w
+        if job.departure is not None:
+            # moving state over the NIC delays the job; re-key its departure
+            job.departure += migration_time
+            self.events.push(Event(time=job.departure, kind=DEPARTURE,
+                                   job_id=worst_id))
+
+    # -- introspection ------------------------------------------------------------
+    def _live_graphs(self) -> list[AppGraph]:
+        return [j.graph for j in self.live.values()]
+
+    def _sample_nic_util(self) -> None:
+        if not self.live:
+            return
+        loads = projected_nic_loads(self._live_graphs(), self.placement,
+                                    self.cluster)
+        self._nic_util_samples.append(loads / self.cluster.nic_bw)
+
+    def check_invariants(self) -> None:
+        """free cores == all cores - live cores; live placements intact."""
+        used = np.zeros(self.cluster.n_cores, dtype=bool)
+        if set(self.placement.assignments) != set(self.live):
+            raise SchedulerInvariantError(
+                f"placement jobs {sorted(self.placement.assignments)} != "
+                f"live jobs {sorted(self.live)}")
+        for jid, job in self.live.items():
+            cores = self.placement.assignments[jid]
+            if job.cores is None or not np.array_equal(cores, job.cores):
+                raise SchedulerInvariantError(f"job {jid} placement drifted")
+            if cores.size != job.graph.n_procs:
+                raise SchedulerInvariantError(f"job {jid} lost processes")
+            if cores.min() < 0 or cores.max() >= self.cluster.n_cores:
+                raise SchedulerInvariantError(f"job {jid} core out of range")
+            if used[cores].any():
+                raise SchedulerInvariantError(f"job {jid} double-assigned core")
+            used[cores] = True
+        if not np.array_equal(used, self.tracker.used):
+            leaked = int((self.tracker.used & ~used).sum())
+            phantom = int((used & ~self.tracker.used).sum())
+            raise SchedulerInvariantError(
+                f"tracker drift: {leaked} leaked, {phantom} phantom cores")
+
+    def stats(self) -> FleetStats:
+        finished = [j for j in self.jobs.values() if j.departure is not None]
+        placed = [j for j in self.jobs.values() if j.placed_at is not None]
+        if self._nic_util_samples:
+            all_util = np.concatenate(self._nic_util_samples)
+            nic_p99 = float(np.percentile(all_util, 99))
+        else:
+            nic_p99 = 0.0
+        return FleetStats(
+            n_jobs=len(self.jobs),
+            makespan=max((j.departure for j in finished), default=0.0),
+            total_queue_wait=float(sum(j.queue_wait for j in placed)),
+            total_msg_wait=float(sum(j.msg_wait for j in placed)),
+            nic_p99_util=nic_p99,
+            peak_sim_util=max(self._util_samples, default=0.0),
+            n_remap_commits=sum(1 for d in self.decisions if d.committed),
+            n_remap_rejects=sum(1 for d in self.decisions if not d.committed),
+            migrated_bytes=float(sum(j.migrated_bytes for j in self.jobs.values())),
+            per_job={j.job_id: {
+                "name": j.graph.name,
+                "arrival": j.arrival,
+                "placed_at": j.placed_at,
+                "departure": j.departure,
+                "queue_wait": j.queue_wait,
+                "msg_wait": j.msg_wait,
+                "n_migrations": j.n_migrations,
+            } for j in self.jobs.values()},
+        )

@@ -1,0 +1,118 @@
+"""Named arrival traces for scheduler benchmarks.
+
+Each trace bundles (cluster topology, arrival stream, scheduler knobs) so
+benchmarks and tests run the same scenario by name:
+
+* ``table2_poisson`` … ``table5_poisson`` — Poisson arrivals over the
+  paper's Table 2–5 synthetic job mixes on the paper's 16x4x4 cluster.
+* ``npb_poisson`` — Poisson arrivals over the Table-6 NPB mix.
+* ``serve_fleet`` — a TPU serving fleet: decode/prefill jobs for the
+  ``repro.configs`` model zoo arriving Poisson on a 2-pod v5e fleet
+  (the ROADMAP's multi-tenant serving scenario).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from ..core.graphs import AppGraph, ClusterTopology
+from ..core.workloads import Arrival, poisson_trace, table_poisson_trace, npb_poisson_trace
+
+MB = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A runnable scheduler scenario."""
+
+    name: str
+    cluster: ClusterTopology
+    arrivals: list[Arrival]
+    count_scale: float          # message-count scale for the sim clock
+    state_bytes_per_proc: float # migration payload per process
+
+
+def _paper_cluster() -> ClusterTopology:
+    return ClusterTopology()    # 16 nodes x 4 sockets x 4 cores, Table 1 b/w
+
+
+def table_trace(table: int, rate: float = 0.5, n_arrivals: int = 16,
+                seed: int = 0) -> TraceSpec:
+    return TraceSpec(
+        name=f"table{table}_poisson",
+        cluster=_paper_cluster(),
+        arrivals=table_poisson_trace(table, rate=rate, n_arrivals=n_arrivals,
+                                     seed=seed),
+        count_scale=0.02,
+        state_bytes_per_proc=64 * MB,
+    )
+
+
+def npb_trace(rate: float = 0.25, n_arrivals: int = 12,
+              seed: int = 0) -> TraceSpec:
+    return TraceSpec(
+        name="npb_poisson",
+        cluster=_paper_cluster(),
+        arrivals=npb_poisson_trace(rate=rate, n_arrivals=n_arrivals,
+                                   seed=seed),
+        count_scale=0.02,
+        state_bytes_per_proc=64 * MB,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving-fleet trace — configs/ model jobs on a TPU fleet
+# ---------------------------------------------------------------------------
+# (arch, shape, mesh_axes) cells sized so several jobs share a 2-pod fleet.
+_SERVE_MIX = (
+    ("qwen3-0.6b", "decode_32k", {"data": 4, "model": 4}),
+    ("granite-3-2b", "decode_32k", {"data": 4, "model": 8}),
+    ("phi4-mini-3.8b", "prefill_32k", {"data": 2, "model": 8}),
+    ("qwen2-moe-a2.7b", "decode_32k", {"data": 4, "model": 8}),
+    ("yi-6b", "prefill_32k", {"data": 2, "model": 16}),
+    ("mamba2-370m", "decode_32k", {"data": 8, "model": 2}),
+)
+
+
+def serve_fleet_mix(steps_per_sec: float = 4.0) -> list[AppGraph]:
+    """AppGraph templates for the serving mix (vertices = mesh coords)."""
+    from ..configs import get_config, SHAPES
+    from ..core.commgraph import appgraph_for
+
+    graphs = []
+    for i, (arch, shape, axes) in enumerate(_SERVE_MIX):
+        graphs.append(appgraph_for(get_config(arch), SHAPES[shape], axes,
+                                   job_id=i, steps_per_sec=steps_per_sec))
+    return graphs
+
+
+def serve_fleet_trace(rate: float = 0.02, n_arrivals: int = 12,
+                      seed: int = 0) -> TraceSpec:
+    from ..core.meshplan import tpu_topology
+
+    return TraceSpec(
+        name="serve_fleet",
+        cluster=tpu_topology(n_pods=2),
+        arrivals=poisson_trace(serve_fleet_mix(), rate, n_arrivals,
+                               seed=seed),
+        count_scale=1.0,            # serve graphs carry per-step counts
+        state_bytes_per_proc=2e9,   # ~HBM-resident shard per chip
+    )
+
+
+TRACES: dict[str, Callable[..., TraceSpec]] = {
+    "table2_poisson": lambda **kw: table_trace(2, **kw),
+    "table3_poisson": lambda **kw: table_trace(3, **kw),
+    "table4_poisson": lambda **kw: table_trace(4, **kw),
+    "table5_poisson": lambda **kw: table_trace(5, **kw),
+    "npb_poisson": lambda **kw: npb_trace(**kw),
+    "serve_fleet": lambda **kw: serve_fleet_trace(**kw),
+}
+
+
+def get_trace(name: str, **kwargs) -> TraceSpec:
+    if name not in TRACES:
+        raise KeyError(f"unknown trace {name!r}; known: {sorted(TRACES)}")
+    return TRACES[name](**kwargs)

@@ -1,0 +1,106 @@
+"""Minimal deterministic fallback for ``hypothesis`` (tests only).
+
+The test-suite uses a small slice of the hypothesis API (``given`` /
+``settings`` / a handful of strategies). Some environments (including the
+pinned CI image) cannot install hypothesis, so tests import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # pragma: no cover
+        from repro.testing import given, settings, strategies as st
+
+The fallback replays each ``@given`` test ``max_examples`` times with
+values drawn from a seeded NumPy generator — deterministic, no shrinking,
+no database; strictly weaker than hypothesis but enough to exercise the
+property bodies. When hypothesis is available it is used unchanged.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from types import SimpleNamespace
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    """A draw function wrapper mirroring hypothesis' SearchStrategy shape."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _sampled_from(seq: Sequence[Any]) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def _lists(elements: _Strategy, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def draw(rng: np.random.Generator):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+strategies = SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from,
+    tuples=_tuples, lists=_lists, booleans=_booleans,
+)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    """Record max_examples on the (already ``given``-wrapped) test."""
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*pos_strategies: _Strategy, **named_strategies: _Strategy) -> Callable:
+    """Run the test once per drawn example (seeded, deterministic).
+
+    Positional strategies fill the test's leading parameters in order,
+    matching hypothesis' calling convention for ``@given(st.lists(...))``.
+    """
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                drawn_pos = [s.draw(rng) for s in pos_strategies]
+                drawn = {k: s.draw(rng) for k, s in named_strategies.items()}
+                fn(*args, *drawn_pos, **drawn, **kwargs)
+        # pytest must not treat the original params as fixtures: hide the
+        # wrapped signature (hypothesis does the same)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(parameters=[])
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """Mapping-strategy unit + property tests (paper Fig. 1 and baselines)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned image lacks hypothesis — deterministic fallback
+    from repro.testing import given, settings, strategies as st
 
 from repro.core import (AppGraph, ClusterTopology, FreeCoreTracker,
                         STRATEGIES, new_mapping)

@@ -1,0 +1,226 @@
+"""Online scheduler tests: core accounting, fragmented placement, remap.
+
+The headline invariant (ISSUE acceptance): after ANY interleaving of
+arrivals and departures, the set of free cores equals (all cores - cores
+of live jobs) and every live job's placement is intact.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ClusterTopology, FreeCoreTracker, STRATEGIES
+from repro.core.graphs import AppGraph, PATTERNS
+from repro.core.workloads import poisson_trace, synt_workload_3, table_poisson_trace
+from repro.sched import FleetScheduler, get_trace
+
+KB = 1 << 10
+MB = 1 << 20
+
+
+def _job(job_id, pattern="all_to_all", procs=8, length=64 * KB, rate=10.0,
+         count=50):
+    return AppGraph.from_pattern(f"j{job_id}_{pattern}", pattern, procs,
+                                 length, rate, count, job_id=job_id)
+
+
+# ---------------------------------------------------------------------------
+# Arrival/departure accounting — no core leaked or double-assigned
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_random_arrival_departure_accounting(strategy):
+    """100 random admit/depart events, invariant checked after every one."""
+    cluster = ClusterTopology(n_nodes=4)          # 64 cores
+    sched = FleetScheduler(cluster, strategy)
+    rng = np.random.default_rng(7)
+    next_id = 0
+    for _ in range(100):
+        can_admit = sched.tracker.total_free() >= 16
+        if sched.live and (not can_admit or rng.random() < 0.4):
+            victim = int(rng.choice(sorted(sched.live)))
+            sched.depart(victim)
+        else:
+            pattern = PATTERNS[int(rng.integers(0, len(PATTERNS)))]
+            procs = int(rng.integers(2, 17))
+            sched.admit(_job(next_id, pattern, procs))
+            next_id += 1
+        sched.check_invariants()
+    # drain: free cores must equal all cores afterwards
+    for jid in sorted(sched.live):
+        sched.depart(jid)
+        sched.check_invariants()
+    assert sched.tracker.total_free() == cluster.n_cores
+    assert not sched.placement.assignments
+
+
+def test_release_cores_rejects_double_release():
+    cluster = ClusterTopology(n_nodes=2)
+    tracker = FreeCoreTracker(cluster)
+    tracker.take_cores(np.array([0, 1, 2]))
+    tracker.release_cores(np.array([0, 1, 2]))
+    with pytest.raises(ValueError):
+        tracker.release_cores(np.array([0]))
+
+
+def test_snapshot_restore_roundtrip():
+    cluster = ClusterTopology(n_nodes=2)
+    tracker = FreeCoreTracker(cluster)
+    tracker.take_cores(np.array([3, 4, 5]))
+    snap = tracker.snapshot()
+    tracker.take_cores(np.array([10, 11]))
+    tracker.restore(snap)
+    assert tracker.total_free() == cluster.n_cores - 3
+    assert not tracker.used[10] and tracker.used[3]
+
+
+# ---------------------------------------------------------------------------
+# Fragmented-tracker placement — all four strategies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_strategies_place_into_fragmented_tracker(strategy):
+    """Strategies must respect pre-occupied cores instead of assuming an
+    empty cluster (the online scheduler's core requirement)."""
+    cluster = ClusterTopology()                   # 256 cores
+    tracker = FreeCoreTracker(cluster)
+    rng = np.random.default_rng(3)
+    occupied = rng.choice(cluster.n_cores, size=150, replace=False)
+    tracker.take_cores(occupied)
+
+    job = _job(0, "all_to_all", 48)
+    placement = STRATEGIES[strategy]([job], cluster, tracker)
+    cores = placement.assignments[0]
+    assert cores.size == 48
+    assert np.unique(cores).size == 48
+    assert not np.isin(cores, occupied).any()     # never lands on a live job
+    assert tracker.used[cores].all()              # tracker was updated
+
+
+def test_admit_raises_when_job_cannot_fit():
+    cluster = ClusterTopology(n_nodes=2)          # 32 cores
+    sched = FleetScheduler(cluster, "new")
+    sched.admit(_job(0, procs=30))
+    with pytest.raises(RuntimeError):
+        sched.admit(_job(1, procs=8))
+
+
+# ---------------------------------------------------------------------------
+# Event loop: simulator-driven departures + FIFO queueing
+# ---------------------------------------------------------------------------
+def test_event_loop_runs_trace_and_departs_everything():
+    spec = get_trace("table4_poisson", n_arrivals=8, seed=0)
+    sched = FleetScheduler(spec.cluster, "new",
+                           state_bytes_per_proc=spec.state_bytes_per_proc,
+                           count_scale=spec.count_scale)
+    sched.submit_trace(spec.arrivals)
+    stats = sched.run()
+    sched.check_invariants()
+    assert stats.n_jobs == 8
+    assert not sched.live and not sched.pending
+    assert sched.tracker.total_free() == spec.cluster.n_cores
+    for rec in stats.per_job.values():
+        assert rec["placed_at"] is not None
+        assert rec["departure"] > rec["placed_at"]  # sim clock moved it
+
+
+def test_oversubscribed_arrivals_queue_fifo():
+    """Jobs beyond capacity wait and are admitted on departure, in order."""
+    cluster = ClusterTopology(n_nodes=2)          # 32 cores
+    sched = FleetScheduler(cluster, "blocked", count_scale=0.1)
+    for k, at in enumerate((0.0, 0.1, 0.2)):
+        sched.submit(_job(k, "linear", procs=24, count=20), at=at)
+    stats = sched.run()
+    sched.check_invariants()
+    assert stats.total_queue_wait > 0.0
+    placed = [stats.per_job[k]["placed_at"] for k in range(3)]
+    assert placed[0] < placed[1] < placed[2]      # FIFO order preserved
+    assert not sched.pending
+
+
+# ---------------------------------------------------------------------------
+# Remap pass — only when profitable under the migration-cost model
+# ---------------------------------------------------------------------------
+def _run_table4(state_bytes_per_proc, migration_cost_factor=1.0):
+    spec = get_trace("table4_poisson", n_arrivals=12, seed=0)
+    sched = FleetScheduler(spec.cluster, "new", remap_interval=5.0,
+                           state_bytes_per_proc=state_bytes_per_proc,
+                           migration_cost_factor=migration_cost_factor,
+                           count_scale=spec.count_scale)
+    sched.submit_trace(spec.arrivals)
+    stats = sched.run()
+    sched.check_invariants()
+    return sched, stats
+
+
+def test_remap_commits_when_migration_is_cheap():
+    sched, stats = _run_table4(state_bytes_per_proc=64 * MB)
+    assert stats.n_remap_commits >= 1
+    for d in sched.decisions:
+        if d.committed:
+            # profitability rule honoured: gain must pay for the bytes
+            assert d.wait_gain > d.migration_time
+            assert d.bytes_moved > 0
+
+
+def test_remap_rejected_when_migration_too_expensive():
+    """Same trace, absurd per-proc state -> every remap must be rejected."""
+    sched, stats = _run_table4(state_bytes_per_proc=1e15)
+    assert stats.n_remap_commits == 0
+    assert stats.migrated_bytes == 0.0
+    # contention was detected (attempts happened) but the cost model vetoed
+    assert stats.n_remap_rejects >= 1
+
+
+def test_remap_respects_migration_budget():
+    sched, stats = _run_table4(state_bytes_per_proc=64 * MB)
+    cap = sched.max_migrations_per_job
+    for rec in stats.per_job.values():
+        assert rec["n_migrations"] <= cap
+
+
+# ---------------------------------------------------------------------------
+# Traces
+# ---------------------------------------------------------------------------
+def test_poisson_trace_deterministic_and_well_formed():
+    a = table_poisson_trace(4, rate=0.5, n_arrivals=16, seed=5)
+    b = table_poisson_trace(4, rate=0.5, n_arrivals=16, seed=5)
+    assert [x.time for x in a] == [x.time for x in b]
+    assert [x.graph.job_id for x in a] == list(range(16))
+    times = [x.time for x in a]
+    assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+    # every template of the table-4 mix appears once per cycle of 8
+    names = {x.graph.name.split("@")[0] for x in a[:8]}
+    assert len(names) == 8
+
+
+def test_poisson_trace_rejects_empty_mix():
+    with pytest.raises(ValueError):
+        poisson_trace([], 1.0, 4)
+
+
+def test_respawned_graphs_share_traffic_but_not_identity():
+    mix = synt_workload_3()
+    trace = poisson_trace(mix, 1.0, 10, seed=0)
+    ids = [a.graph.job_id for a in trace]
+    assert len(set(ids)) == len(ids)
+    assert trace[0].graph.L is not None
+
+
+# ---------------------------------------------------------------------------
+# Incremental place_jobs (meshplan)
+# ---------------------------------------------------------------------------
+def test_place_jobs_incremental_extends_existing_placement():
+    from repro.configs import SHAPES, get_config
+    from repro.core.meshplan import JobSpec, place_jobs, tpu_topology
+
+    topo = tpu_topology(n_pods=2)
+    base = [JobSpec("a", get_config("qwen3-0.6b"), SHAPES["decode_32k"],
+                    {"data": 4, "model": 4})]
+    placement, graphs = place_jobs(base, topo, strategy="new")
+    before = {jid: c.copy() for jid, c in placement.assignments.items()}
+
+    extra = [JobSpec("b", get_config("granite-3-2b"), SHAPES["decode_32k"],
+                     {"data": 4, "model": 8})]
+    placement, new_graphs = place_jobs(extra, topo, strategy="new",
+                                       placement=placement)
+    assert new_graphs[0].job_id == 1              # ids continue
+    placement.validate()                          # no double-assignment
+    for jid, cores in before.items():
+        assert np.array_equal(placement.assignments[jid], cores)

@@ -1,6 +1,9 @@
 """Queueing-simulator tests: Lindley recursion vs brute force, routing."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned image lacks hypothesis — deterministic fallback
+    from repro.testing import given, settings, strategies as st
 
 from repro.core import AppGraph, ClusterTopology, Placement, simulate
 from repro.core.simulator import _lindley_waits
