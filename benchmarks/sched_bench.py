@@ -27,7 +27,7 @@ DEFAULT_STRATEGIES = ("blocked", "cyclic", "drb", "new")
 def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
               rate: float | None = None, n_arrivals: int | None = None,
               seed: int = 0, remap_interval: float | None = 5.0,
-              util_threshold: float = 0.75) -> dict:
+              util_threshold: float = 0.75, sim_backend: str = "auto") -> dict:
     kwargs = {"seed": seed}
     if rate is not None:
         kwargs["rate"] = rate
@@ -43,7 +43,8 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
             remap_interval=remap_interval,
             util_threshold=util_threshold,
             state_bytes_per_proc=spec.state_bytes_per_proc,
-            count_scale=spec.count_scale)
+            count_scale=spec.count_scale,
+            sim_backend=sim_backend)
         sched.submit_trace(spec.arrivals)
         stats = sched.run()
         sched.check_invariants()                     # fleet accounting intact
@@ -66,7 +67,8 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
         "params": {"seed": seed, "rate": rate, "n_arrivals": n_arrivals,
                    "remap_interval": remap_interval,
                    "util_threshold": util_threshold,
-                   "count_scale": count_scale},
+                   "count_scale": count_scale,
+                   "sim_backend": sim_backend},
         "strategies": results,
         "comparison": comparison,
     }
@@ -103,6 +105,8 @@ def main(argv=None) -> None:
     ap.add_argument("--no-remap", action="store_true",
                     help="disable the periodic remap pass")
     ap.add_argument("--util-threshold", type=float, default=0.75)
+    ap.add_argument("--sim-backend", default="auto",
+                    help="simulator backend: auto|loop|segmented|jax|pallas")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
 
@@ -110,7 +114,7 @@ def main(argv=None) -> None:
         args.trace, tuple(args.strategies),
         rate=args.rate, n_arrivals=args.arrivals, seed=args.seed,
         remap_interval=None if args.no_remap else args.remap_interval,
-        util_threshold=args.util_threshold)
+        util_threshold=args.util_threshold, sim_backend=args.sim_backend)
     _print_table(report)
     text = json.dumps(report, indent=1, sort_keys=True)
     print(text)

@@ -3,17 +3,22 @@
 Public surface:
   graphs     — AppGraph / ClusterTopology / Placement
   mapping    — blocked / cyclic / drb / new_mapping (paper Fig. 1)
-  simulator  — queueing model of message waiting times (paper sec. 5)
+  simulator  — queueing model of message waiting times (paper sec. 5);
+               loop / segmented / jax / pallas backends + simulate_batch
+  sim_scan   — segmented max-plus scan backends (DESIGN.md §8)
   workloads  — paper Tables 2–9
   commgraph  — AppGraph derivation for JAX jobs (collective traffic)
   meshplan   — TPU fleet topology + device-order planning
 """
-from .graphs import AppGraph, ClusterTopology, FreeCoreTracker, Placement
+from .graphs import (AppGraph, ClusterTopology, FlatMessages,
+                     FreeCoreTracker, Placement, tie_phase)
 from .mapping import STRATEGIES, blocked, cyclic, drb, new_mapping
-from .simulator import SimResult, simulate
+from .simulator import (BACKENDS, SimResult, resolve_backend, simulate,
+                        simulate_batch)
 
 __all__ = [
-    "AppGraph", "ClusterTopology", "FreeCoreTracker", "Placement",
+    "AppGraph", "ClusterTopology", "FlatMessages", "FreeCoreTracker",
+    "Placement", "tie_phase",
     "STRATEGIES", "blocked", "cyclic", "drb", "new_mapping",
-    "SimResult", "simulate",
+    "BACKENDS", "SimResult", "resolve_backend", "simulate", "simulate_batch",
 ]

@@ -60,6 +60,64 @@ def pattern_traffic(pattern: str, n_procs: int, length: float, rate: float,
     return L, lam, cnt
 
 
+def tie_phase(job_id, rank):
+    """Deterministic per-(job, sender) emission phase offset (seconds).
+
+    Senders that tick at the same rate would emit at identical instants;
+    the phase breaks those ties deterministically. It is keyed on BOTH the
+    job id and the sender's rank within the job — keying on the rank alone
+    would give identical ranks of *different* jobs colliding phases, and
+    their arrival order at a shared server would then depend on flattening
+    order rather than on anything physical.
+
+    Accepts scalars or arrays (int64 math, no overflow for realistic ids).
+    """
+    j = np.asarray(job_id, dtype=np.int64)
+    r = np.asarray(rank, dtype=np.int64)
+    return ((j * 2654435761 + r * 7919) % 104729) * 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatMessages:
+    """Placement-independent flattened message stream of one job.
+
+    Messages of one (i, j) pair share sender, receiver, and size, so those
+    live at PAIR granularity (``pair_*``) with ``pair_of`` mapping each of
+    the M messages back to its pair: routing is computed over the few
+    thousand pairs and expanded with one gather, and repeated
+    ``simulate()`` calls never re-run the Python pair-expansion loop.
+    ``src``/``dst`` are process ranks *within the job*; a placement turns
+    them into global core ids with a single gather (``cores[pair_src]``).
+    """
+
+    pair_src: np.ndarray   # (P,) sender rank per communicating pair
+    pair_dst: np.ndarray   # (P,) receiver rank
+    pair_size: np.ndarray  # (P,) bytes
+    pair_of: np.ndarray    # (M,) pair index per message
+    emit: np.ndarray       # (M,) emission time (s), tie-phase included
+
+    @property
+    def n_messages(self) -> int:
+        return int(self.emit.size)
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.pair_src.size)
+
+    # per-message views (derived; prefer the pair arrays in hot paths)
+    @property
+    def src(self) -> np.ndarray:
+        return self.pair_src[self.pair_of]
+
+    @property
+    def dst(self) -> np.ndarray:
+        return self.pair_dst[self.pair_of]
+
+    @property
+    def size(self) -> np.ndarray:
+        return self.pair_size[self.pair_of]
+
+
 # ---------------------------------------------------------------------------
 # Application graph
 # ---------------------------------------------------------------------------
@@ -76,6 +134,10 @@ class AppGraph:
     lam: np.ndarray    # (P, P) messages / second
     cnt: np.ndarray    # (P, P) total message count
     job_id: int = 0
+    # flat_messages() cache, keyed by count_scale. Traffic matrices are
+    # treated as immutable once messages have been flattened.
+    _flat_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                          compare=False)
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -103,6 +165,36 @@ class AppGraph:
             lam = lam + lamp
             cnt = cnt + cntp
         return cls(name=name, L=L, lam=lam, cnt=cnt, job_id=job_id)
+
+    # -- message flattening --------------------------------------------------
+    def flat_messages(self, count_scale: float = 1.0) -> FlatMessages:
+        """Expanded per-message arrays, cached per ``count_scale``.
+
+        Matches the simulator's historical expansion exactly: each (i, j)
+        pair with ``cnt[i, j] > 0`` emits ``max(1, round(cnt * scale))``
+        messages at ``tie_phase(job_id, i) + k / lam[i, j]``.
+        """
+        cached = self._flat_cache.get(count_scale)
+        if cached is not None:
+            return cached
+        src_i, dst_j = np.nonzero(self.cnt)
+        n_pair = np.maximum(
+            1, np.rint(self.cnt[src_i, dst_j] * count_scale)).astype(np.int64)
+        rate = self.lam[src_i, dst_j]
+        period = np.divide(1.0, rate, out=np.zeros_like(rate),
+                           where=rate > 0)
+        starts = np.concatenate([[0], np.cumsum(n_pair)[:-1]])
+        pair_of = np.repeat(np.arange(src_i.size), n_pair).astype(np.int32)
+        k = np.arange(int(n_pair.sum()), dtype=np.int64) - starts[pair_of]
+        flat = FlatMessages(
+            pair_src=src_i.astype(np.int32),
+            pair_dst=dst_j.astype(np.int32),
+            pair_size=self.L[src_i, dst_j],
+            pair_of=pair_of,
+            emit=tie_phase(self.job_id, src_i)[pair_of] + k * period[pair_of],
+        )
+        self._flat_cache[count_scale] = flat
+        return flat
 
     # -- paper quantities ----------------------------------------------------
     @property
@@ -206,6 +298,21 @@ class ClusterTopology:
 
     def core_id(self, node: int, socket: int, slot: int) -> int:
         return node * self.cores_per_node + socket * self.cores_per_socket + slot
+
+    def core_maps(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(node, socket, pod) per global core id — cached lookup tables.
+
+        Hot paths (``sim_scan``) replace per-message div/mod chains with one
+        gather per attribute. Topology fields are treated as immutable once
+        this has been called.
+        """
+        maps = getattr(self, "_core_maps", None)
+        if maps is None:
+            cores = np.arange(self.n_cores)
+            maps = (self.node_of(cores), self.socket_of(cores),
+                    self.pod_of(cores))
+            self._core_maps = maps
+        return maps
 
 
 @dataclasses.dataclass

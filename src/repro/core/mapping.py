@@ -153,7 +153,10 @@ def drb(jobs: Sequence[AppGraph], cluster: ClusterTopology,
         chosen = free[:job.n_procs]  # compact block of free cores
         out = np.full(job.n_procs, -1, dtype=np.int64)
         _drb_assign(np.arange(job.n_procs), chosen, job.sym_demand, cluster, out)
-        tracker.used[chosen] = True
+        # claim through the tracker API — writing ``used`` directly would
+        # bypass the double-take check that snapshot/restore and the
+        # scheduler's invariant audit rely on
+        tracker.take_cores(chosen)
         placement.assign(job.job_id, out)
     return placement
 

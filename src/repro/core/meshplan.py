@@ -166,7 +166,9 @@ def new_mapping_tpu(jobs, topo: ClusterTopology,
             cores[:] = free[:job.n_procs]
             # the paper's threshold, applied to pod-crossing endpoints
             cores = _nic_balance_pass(cores, job, topo)
-            tracker.used[cores] = True
+            # claim through the tracker API so a double-take fails here,
+            # not later in the scheduler's invariant audit
+            tracker.take_cores(cores)
             placement.assign(job.job_id, cores)
     return placement
 

@@ -1,0 +1,583 @@
+"""Scan-based simulator backends: segmented Lindley passes, no server loop.
+
+The ``loop`` backend (``simulator._simulate_loop``) runs Lindley's recursion
+once per server in a Python loop. This module replaces that with ONE
+segmented scan over all servers of a routing round at once (DESIGN.md §8):
+
+* Sort messages by ``(server, arrival)`` (stable — ties keep flattening
+  order, matching the loop backend sequence-for-sequence).
+* Lindley's recursion ``W_n = max(0, W_{n-1} + X_n)`` with
+  ``X_n = S_{n-1} - (A_n - A_{n-1})`` is max-plus linear: each message is
+  the map ``w -> max(w + X_n, 0)``, segment heads are the constant map
+  ``w -> 0``. Maps ``(u, v): w -> max(w + u, v)`` compose associatively:
+  ``(u1, v1) . (u2, v2) = (u1 + u2, max(v1 + u2, v2))`` — so the whole
+  multi-server pass is one associative scan with heads encoded as
+  ``(-inf, 0)``; no per-segment bookkeeping at scan time.
+
+Three implementations of the scan:
+
+* ``segmented`` — numpy: segmented prefix sums plus a segmented running
+  minimum computed densely per server row (``np.minimum.accumulate`` on a
+  (servers, max-queue) grid; doubling-sweep fallback when the grid would
+  blow up). Exact — matches ``loop`` to ~1e-12 relative.
+* ``jax``       — ``jax.lax.associative_scan`` over the ``(u, v)`` elements,
+  jitted, padded to powers of two to bound recompiles; float64 when
+  ``jax.experimental.enable_x64`` is available. Batches over a leading axis
+  for ``simulate_batch``.
+* ``pallas``    — ``repro.kernels.lindley_scan``: the same elements through
+  a chunked Pallas TPU kernel (float32; ``interpret=True`` on CPU).
+
+Routing gives every message a *round-1* server (cache / memory / ICI-TX /
+NIC-TX — disjoint id spaces) and inter-node messages a *round-2* RX server;
+round 2's arrivals are round 1's departures + switch latency, so the whole
+simulator is exactly two scans regardless of cluster size.
+
+Per-workload host arrays (flattened messages, the arrival-time sort order)
+are placement-independent; they are cached keyed on the live job set so the
+scheduler's repeated ``simulate()`` calls only pay for routing + scanning.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Sequence
+
+import numpy as np
+
+from .graphs import AppGraph, ClusterTopology, Placement
+from .simulator import SimResult
+
+_SPAN_FLOOR = 1e-30       # utilisation denominator floor (matches loop)
+_DENSE_CUMMIN_CAP = 1 << 22   # max cells of the per-server min grid (32 MB)
+
+
+# ---------------------------------------------------------------------------
+# Workload flattening (placement-independent, cached per live job set)
+# ---------------------------------------------------------------------------
+class _WorkloadFlat:
+    """Concatenated flat messages of one job set + arrival-time sort order.
+
+    Pair-granular fields (``pair_*``) drive routing — there are orders of
+    magnitude fewer communicating pairs than messages; ``pair_of`` expands
+    pair-level results to messages with one gather.
+    """
+
+    def __init__(self, jobs: Sequence[AppGraph], count_scale: float):
+        self.jobs = list(jobs)            # strong refs keep id() keys valid
+        job_rows, pair_ofs, emits = [], [], []
+        p_src, p_dst, p_size = [], [], []
+        proc_off = 0
+        pair_off = 0
+        self.offsets = {}
+        for k, job in enumerate(jobs):
+            fm = job.flat_messages(count_scale)
+            self.offsets[job.job_id] = proc_off
+            if fm.n_messages:
+                job_rows.append(np.full(fm.n_messages, k, dtype=np.int32))
+                pair_ofs.append(fm.pair_of.astype(np.int64) + pair_off)
+                emits.append(fm.emit)
+                p_src.append(fm.pair_src.astype(np.int64) + proc_off)
+                p_dst.append(fm.pair_dst.astype(np.int64) + proc_off)
+                p_size.append(fm.pair_size)
+            proc_off += job.n_procs
+            pair_off += fm.n_pairs
+        self.n_procs = proc_off
+        if emits:
+            self.job_row = np.concatenate(job_rows)
+            self.pair_of = np.concatenate(pair_ofs).astype(np.int32)
+            self.emit = np.concatenate(emits)
+            self.pair_src = np.concatenate(p_src)
+            self.pair_dst = np.concatenate(p_dst)
+            self.pair_size = np.concatenate(p_size)
+            # stable time order: the placement-independent half of the
+            # stable (server, arrival) sort every round-1 pass needs —
+            # cached pre-permuted views keep per-call gathers narrow
+            self.time_order = np.argsort(self.emit,
+                                         kind="stable").astype(np.int32)
+            self.emit_t = self.emit[self.time_order]
+            self.pair_of_t = self.pair_of[self.time_order]
+            # per-job message blocks for _metrics (job_row non-decreasing)
+            counts = np.bincount(self.job_row, minlength=len(self.jobs))
+            self.job_starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            self.job_nonempty = counts > 0
+        else:
+            self.emit = np.empty(0)
+
+    @property
+    def n_messages(self) -> int:
+        return int(self.emit.size)
+
+    def core_table(self, placement: Placement) -> np.ndarray:
+        """Per-(job, rank) global core id, aligned with pair_src/pair_dst."""
+        table = np.empty(self.n_procs, dtype=np.int64)
+        for job in self.jobs:
+            off = self.offsets[job.job_id]
+            table[off:off + job.n_procs] = placement.assignments[job.job_id]
+        return table
+
+
+_FLAT_CACHE: OrderedDict[tuple, _WorkloadFlat] = OrderedDict()
+_FLAT_CACHE_SIZE = 8
+
+
+def _flatten(jobs: Sequence[AppGraph], count_scale: float) -> _WorkloadFlat:
+    key = (tuple(id(j) for j in jobs), count_scale)
+    flat = _FLAT_CACHE.get(key)
+    if flat is None:
+        flat = _WorkloadFlat(jobs, count_scale)
+        _FLAT_CACHE[key] = flat
+        while len(_FLAT_CACHE) > _FLAT_CACHE_SIZE:
+            _FLAT_CACHE.popitem(last=False)
+    else:
+        _FLAT_CACHE.move_to_end(key)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+def _route(cluster: ClusterTopology, s_core: np.ndarray, r_core: np.ndarray,
+           size: np.ndarray):
+    """Round-1 server id + service time per message, plus RX round info.
+
+    Server id spaces are disjoint per channel so one scan covers them all:
+    ``[0, N*S)`` cache sockets, then mem, ICI-TX, NIC-TX node blocks.
+    Round 2 (two-stage messages only): ICI-RX then NIC-RX node blocks.
+    """
+    node_map, sock_map, pod_map = cluster.core_maps()
+    s_node = node_map[s_core]
+    r_node = node_map[r_core]
+    s_sock = sock_map[s_core]
+    r_sock = sock_map[r_core]
+
+    same_node = s_node == r_node
+    same_sock = same_node & (s_sock == r_sock)
+    via_cache = same_sock & (size <= cluster.cache_msg_cap)
+    via_mem = same_node & ~via_cache
+    inter = ~same_node
+    if cluster.ici_bw is not None and cluster.pods >= 1:
+        same_pod = pod_map[s_core] == pod_map[r_core]
+        via_ici = inter & same_pod
+        inter = inter & ~same_pod
+    else:
+        via_ici = np.zeros_like(inter)
+
+    n_sock = cluster.n_nodes * cluster.sockets_per_node
+    sid1 = np.empty(size.size, dtype=np.int64)
+    sid2 = np.zeros(size.size, dtype=np.int64)
+    service = np.empty(size.size, dtype=np.float64)
+
+    if via_cache.any():
+        sid1[via_cache] = s_node[via_cache] * cluster.sockets_per_node \
+            + s_sock[via_cache]
+        service[via_cache] = size[via_cache] / cluster.cache_bw
+    if via_mem.any():
+        penalty = np.where(s_sock[via_mem] != r_sock[via_mem],
+                           1.0 + cluster.numa_remote_penalty, 1.0)
+        sid1[via_mem] = n_sock + s_node[via_mem]
+        service[via_mem] = size[via_mem] / cluster.mem_bw * penalty
+    if via_ici.any():
+        sid1[via_ici] = n_sock + cluster.n_nodes + s_node[via_ici]
+        sid2[via_ici] = r_node[via_ici]
+        service[via_ici] = size[via_ici] / cluster.ici_bw
+    if inter.any():
+        sid1[inter] = n_sock + 2 * cluster.n_nodes + s_node[inter]
+        sid2[inter] = cluster.n_nodes + r_node[inter]
+        service[inter] = size[inter] / cluster.nic_bw
+
+    return sid1, service, via_ici | inter, sid2
+
+
+def _route_pairs(cluster: ClusterTopology, flat: _WorkloadFlat,
+                 placement: Placement):
+    """Route at pair granularity — all fields stay pair-level.
+
+    Callers expand through ``flat.pair_of`` (or its sorted views) with
+    one narrow gather wherever message granularity is actually needed.
+    """
+    cores = flat.core_table(placement)
+    return _route(cluster, cores[flat.pair_src], cores[flat.pair_dst],
+                  flat.pair_size)
+
+
+def _round1_order(flat: _WorkloadFlat, sid1_p: np.ndarray):
+    """Stable (server, arrival) order for round 1, built from cached
+    pre-permuted views: one radix pass over narrow per-pair server ids.
+
+    Returns (order, po_s, starts): original-index order, pair index per
+    sorted message, segment-head mask.
+    """
+    if sid1_p.max() < np.iinfo(np.int16).max:
+        sid1_p = sid1_p.astype(np.int16)    # radix sort + 2-byte gathers
+    key_t = sid1_p[flat.pair_of_t]
+    r = np.argsort(key_t, kind="stable").astype(np.int32)
+    order = flat.time_order[r]
+    po_s = flat.pair_of_t[r]
+    starts = _segment_starts(key_t[r])
+    return order, po_s, starts, r
+
+
+# ---------------------------------------------------------------------------
+# Stable (server, arrival) ordering
+# ---------------------------------------------------------------------------
+def _stable_sid_sort(sid: np.ndarray, time_order: np.ndarray) -> np.ndarray:
+    """Stable-by-arrival order refined by server id (== np.lexsort, faster).
+
+    Server ids are tiny, so the refining sort is an O(n) radix pass when
+    they fit int16.
+    """
+    key = sid[time_order]
+    if key.size and key.max() < np.iinfo(np.int16).max:
+        key = key.astype(np.int16)
+    return time_order[np.argsort(key, kind="stable")]
+
+
+def _repair_ties(order: np.ndarray, sid_s: np.ndarray, arr_s: np.ndarray,
+                 rank: np.ndarray | None = None) -> bool:
+    """Reorder exact (server, arrival) tie runs to loop-backend semantics.
+
+    Unstable sorts may leave messages with EQUAL arrival at the SAME
+    server in arbitrary relative order; the loop backend's stable lexsort
+    keeps flattening order. Tied runs are re-sorted in place by ascending
+    ``rank[order]`` (original index when ``rank`` is None). Returns True
+    if anything changed (caller must re-derive sorted views).
+    """
+    tie = (sid_s[1:] == sid_s[:-1]) & (arr_s[1:] == arr_s[:-1])
+    if not tie.any():
+        return False
+    in_run = np.empty(order.size, dtype=bool)
+    in_run[0] = False
+    in_run[1:] = tie
+    run_id = np.cumsum(~in_run)
+    member = in_run.copy()
+    member[:-1] |= tie                            # heads of tie runs too
+    at = np.flatnonzero(member)
+    key = order[at] if rank is None else rank[order[at]]
+    fix = np.lexsort((key, run_id[at]))
+    order[at] = order[at][fix]
+    return True
+
+
+def _order_by_server_arrival(sid: np.ndarray,
+                             arrival: np.ndarray) -> np.ndarray:
+    """(server, arrival)-sorted order with loop-backend tie semantics.
+
+    An unstable float sort is ~5x faster than a stable one; stability only
+    matters for the rare exactly-tied runs, repaired afterwards.
+    """
+    t_order = np.argsort(arrival)                 # unstable, fast
+    order = _stable_sid_sort(sid, t_order)
+    _repair_ties(order, sid[order], arrival[order])
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Segmented Lindley scans (inputs pre-sorted by (server, arrival))
+# ---------------------------------------------------------------------------
+def _segment_starts(sid_s: np.ndarray) -> np.ndarray:
+    starts = np.empty(sid_s.size, dtype=bool)
+    starts[0] = True
+    np.not_equal(sid_s[1:], sid_s[:-1], out=starts[1:])
+    return starts
+
+
+def _increments(arr_s, srv_s, s_idx):
+    """X_n per sorted message; 0 at segment heads (fresh server)."""
+    x = np.empty(arr_s.size)
+    x[0] = 0.0
+    np.subtract(arr_s[1:], arr_s[:-1], out=x[1:])       # dA_n
+    np.subtract(srv_s[:-1], x[1:], out=x[1:])           # S_{n-1} - dA_n
+    x[s_idx] = 0.0
+    return x
+
+
+def _segmented_waits_numpy(arr_s, srv_s, starts):
+    """W = M - running-min(M) per segment, M the segmented prefix sum of X.
+
+    The per-segment offset of the GLOBAL prefix sum ``cs`` cancels in
+    ``M - min M``, so W = cs - segmin(cs) directly.
+
+    Fast path for segmin: scatter each segment onto its own row of a
+    (servers, longest-queue) grid and run one dense
+    ``np.minimum.accumulate``. When a skewed segment-length distribution
+    would blow the grid up, fall back to doubling sweeps with an
+    in-segment guard (after the sweep with step d, position i holds the
+    min over ``[max(head_i, i - 2d + 1), i]`` — min never rounds, so both
+    paths are exact).
+    """
+    n = arr_s.size
+    s_idx = np.flatnonzero(starts)
+    lens = np.diff(np.append(s_idx, n))
+    cs = np.cumsum(_increments(arr_s, srv_s, s_idx))
+    n_seg = s_idx.size
+    width = int(lens.max())
+    if n_seg * width <= max(4 * n, _DENSE_CUMMIN_CAP):
+        # lin[i] = row_i * width + (i - head_i), built per segment
+        rowbase = np.arange(n_seg, dtype=np.int64) * width - s_idx
+        lin = (np.repeat(rowbase, lens)
+               + np.arange(n, dtype=np.int64)).astype(np.int32)
+        dense = np.full(n_seg * width, np.inf)
+        dense[lin] = cs
+        grid = dense.reshape(n_seg, width)
+        np.minimum.accumulate(grid, axis=1, out=grid)
+        return np.subtract(cs, dense[lin], out=cs)
+    head = np.repeat(s_idx, lens)
+    pos = np.arange(n) - head
+    m = cs.copy()
+    d = 1
+    while d < width:
+        cand = np.minimum(m[d:], m[:-d])
+        m[d:] = np.where(pos[d:] >= d, cand, m[d:])
+        d <<= 1
+    return np.subtract(cs, m, out=cs)
+
+
+def _uv_elements(arr_s, srv_s, starts):
+    """Max-plus scan elements: interior (X_n, 0), segment head (-inf, 0)."""
+    s_idx = np.flatnonzero(starts)
+    u = _increments(arr_s, srv_s, s_idx)
+    u[s_idx] = -np.inf
+    return u, np.zeros(arr_s.size)
+
+
+_JAX_SCAN = None
+
+
+def _jax_scan_fn():
+    global _JAX_SCAN
+    if _JAX_SCAN is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def scan(u, v):
+            def comb(a, b):
+                au, av = a
+                bu, bv = b
+                return au + bu, jnp.maximum(av + bu, bv)
+            big_u, big_v = jax.lax.associative_scan(comb, (u, v), axis=-1)
+            return jnp.maximum(big_u, big_v)
+
+        _JAX_SCAN = scan
+    return _JAX_SCAN
+
+
+def _waits_jax(u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Run the (possibly batched) max-plus scan on the JAX backend.
+
+    Rows are padded to the next power of two with identity elements
+    ``(0, -inf)`` so live fleets (whose message count changes every
+    admission) hit a bounded set of compiled shapes.
+    """
+    import jax.numpy as jnp
+    try:
+        from jax.experimental import enable_x64
+    except ImportError:                     # pragma: no cover - old jax
+        enable_x64 = None
+    n = u.shape[-1]
+    npad = 1 << max(0, int(n - 1).bit_length())
+    if npad > n:
+        widths = [(0, 0)] * (u.ndim - 1) + [(0, npad - n)]
+        u = np.pad(u, widths, constant_values=0.0)
+        v = np.pad(v, widths, constant_values=-np.inf)
+    scan = _jax_scan_fn()
+    if enable_x64 is not None:
+        with enable_x64():
+            w = scan(jnp.asarray(u), jnp.asarray(v))
+    else:                                   # pragma: no cover - old jax
+        w = scan(jnp.asarray(u), jnp.asarray(v))
+    return np.asarray(w)[..., :n]
+
+
+def _waits_pallas(u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    import jax
+    from ..kernels.lindley_scan import lindley_scan
+    squeeze = u.ndim == 1
+    if squeeze:
+        u, v = u[None], v[None]
+    w = np.asarray(lindley_scan(u, v,
+                                interpret=jax.default_backend() != "tpu"))
+    return w[0] if squeeze else w
+
+
+def _util_max(arr_s, srv_s, w_s, starts) -> float:
+    """max over servers of busy/span — same definition as the loop backend."""
+    s_idx = np.flatnonzero(starts)
+    ends = np.append(s_idx[1:], arr_s.size)
+    busy = np.add.reduceat(srv_s, s_idx)
+    span = arr_s[ends - 1] + w_s[ends - 1] + srv_s[ends - 1] - arr_s[s_idx]
+    return float((busy / np.maximum(span, _SPAN_FLOOR)).max())
+
+
+def _pass_waits(arr_s, srv_s, starts, backend: str) -> np.ndarray:
+    """Sorted-domain waits for one multi-server round on any backend."""
+    if backend == "segmented":
+        return _segmented_waits_numpy(arr_s, srv_s, starts)
+    u, v = _uv_elements(arr_s, srv_s, starts)
+    w = _waits_jax(u, v) if backend == "jax" else _waits_pallas(u, v)
+    return np.asarray(w, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Whole-workload simulation
+# ---------------------------------------------------------------------------
+def _metrics(jobs, flat: _WorkloadFlat, wait, deliver, util) -> SimResult:
+    nj = len(jobs)
+    # job_row is non-decreasing (jobs flattened in order), so per-job sums
+    # and maxes are reduceats over cached contiguous blocks
+    nonempty = flat.job_nonempty
+    block = flat.job_starts[nonempty]
+    per = np.zeros(nj)
+    per[nonempty] = np.add.reduceat(wait, block)
+    finish = np.zeros(nj)
+    finish[nonempty] = np.maximum.reduceat(deliver, block)
+    per_job_wait = {job.job_id: float(per[k]) for k, job in enumerate(jobs)}
+    job_finish = {job.job_id: float(finish[k]) for k, job in enumerate(jobs)}
+    return SimResult(
+        total_wait=float(wait.sum()),
+        per_job_wait=per_job_wait,
+        workload_finish=float(deliver.max()),
+        job_finish=job_finish,
+        total_job_finish=float(sum(job_finish.values())),
+        n_messages=int(wait.size),
+        max_server_utilisation=float(util),
+    )
+
+
+def simulate_scan(jobs: Sequence[AppGraph], placement: Placement,
+                  cluster: ClusterTopology | None = None,
+                  count_scale: float = 1.0,
+                  backend: str = "segmented") -> SimResult:
+    """Scan-backend equivalent of ``simulator.simulate`` (same metrics)."""
+    cluster = cluster or placement.cluster
+    placement.validate()
+    flat = _flatten(jobs, count_scale)
+    if flat.n_messages == 0:
+        return SimResult(0.0, {}, 0.0, {}, 0.0, 0, 0.0)
+    sid1_p, service_p, two_p, sid2_p = _route_pairs(cluster, flat, placement)
+
+    # ---- round 1: every message at its first server ----------------------
+    order, po_s, starts, r = _round1_order(flat, sid1_p)
+    arr_s = flat.emit_t[r]
+    srv_s = service_p[po_s]
+    w_s = _pass_waits(arr_s, srv_s, starts, backend)
+    util = _util_max(arr_s, srv_s, w_s, starts)
+    deliver_s = arr_s + w_s + srv_s
+    n = flat.n_messages
+    wait = np.empty(n)
+    wait[order] = w_s
+    deliver = np.empty(n)
+    deliver[order] = deliver_s
+
+    # ---- round 2: inter-node messages at their RX server -----------------
+    two_s = two_p[po_s]
+    if two_s.any():
+        sub = np.flatnonzero(two_s)           # positions in r1 sort order
+        rows = order[sub]                     # original message indices
+        arrive = deliver_s[sub] + cluster.switch_latency
+        srv2 = srv_s[sub]
+        sid2 = sid2_p[po_s[sub]]
+        # FIFO departures are monotone per r1 server, so ``arrive`` is a
+        # concatenation of ascending runs — timsort merges them cheaply
+        t2 = np.argsort(arrive, kind="stable")
+        o2 = _stable_sid_sort(sid2, t2)
+        sid2_s = sid2[o2]
+        arr2_s = arrive[o2]
+        # the stable sort above keeps r1-sort order on ties; the loop
+        # backend keeps ORIGINAL order — repair the (rare) tied runs
+        if _repair_ties(o2, sid2_s, arr2_s, rank=rows):
+            sid2_s = sid2[o2]
+            arr2_s = arrive[o2]
+        starts2 = _segment_starts(sid2_s)
+        srv2_s = srv2[o2]
+        w2_s = _pass_waits(arr2_s, srv2_s, starts2, backend)
+        util = max(util, _util_max(arr2_s, srv2_s, w2_s, starts2))
+        rows2 = rows[o2]
+        wait[rows2] += w2_s
+        deliver[rows2] = arr2_s + w2_s + srv2_s
+    return _metrics(jobs, flat, wait, deliver, util)
+
+
+# ---------------------------------------------------------------------------
+# Batched candidate evaluation (JAX backend)
+# ---------------------------------------------------------------------------
+def simulate_scan_batch(jobs: Sequence[AppGraph],
+                        placements: Sequence[Placement],
+                        cluster: ClusterTopology | None = None,
+                        count_scale: float = 1.0) -> list[SimResult]:
+    """Score K placements of one job set with TWO batched scan calls.
+
+    Placements share jobs and message count M, so round-1 rows stack into a
+    dense (K, M) batch; round-2 row lengths differ per placement (routing
+    differs) and are padded with identity elements past the real tail.
+    """
+    if not placements:
+        return []
+    cluster = cluster or placements[0].cluster
+    flat = _flatten(jobs, count_scale)
+    if flat.n_messages == 0:
+        return [SimResult(0.0, {}, 0.0, {}, 0.0, 0, 0.0) for _ in placements]
+    for p in placements:
+        p.validate()
+
+    K = len(placements)
+    rows = []                 # per-k state carried between the two rounds
+    u1 = np.empty((K, flat.n_messages))
+    v1 = np.empty_like(u1)
+    for k, p in enumerate(placements):
+        sid1_p, service_p, two_p, sid2_p = _route_pairs(cluster, flat, p)
+        order, po_s, starts, r = _round1_order(flat, sid1_p)
+        service = service_p[flat.pair_of]
+        u1[k], v1[k] = _uv_elements(flat.emit_t[r], service_p[po_s], starts)
+        rows.append({"service": service, "two": two_p[flat.pair_of],
+                     "sid2": sid2_p[flat.pair_of],
+                     "order": order, "starts": starts})
+
+    w1 = _waits_jax(u1, v1)
+    results_state = []
+    max_l2 = 0
+    for k, st in enumerate(rows):
+        order, starts = st["order"], st["starts"]
+        arr_s, srv_s = flat.emit[order], st["service"][order]
+        w_s = np.asarray(w1[k], dtype=np.float64)
+        util = _util_max(arr_s, srv_s, w_s, starts)
+        wait = np.empty_like(w_s)
+        wait[order] = w_s
+        deliver = flat.emit + wait + st["service"]
+        idx2 = np.flatnonzero(st["two"])
+        results_state.append({"wait": wait, "deliver": deliver, "util": util,
+                              "idx2": idx2})
+        max_l2 = max(max_l2, idx2.size)
+
+    if max_l2:
+        u2 = np.zeros((K, max_l2))
+        v2 = np.full((K, max_l2), -np.inf)
+        round2 = []
+        for k, (st, rs) in enumerate(zip(rows, results_state)):
+            idx2 = rs["idx2"]
+            if idx2.size == 0:
+                round2.append(None)
+                continue
+            arrive = rs["deliver"][idx2] + cluster.switch_latency
+            srv = st["service"][idx2]
+            order = _order_by_server_arrival(st["sid2"][idx2], arrive)
+            starts = _segment_starts(st["sid2"][idx2][order])
+            u2[k, :idx2.size], v2[k, :idx2.size] = _uv_elements(
+                arrive[order], srv[order], starts)
+            round2.append({"arrive": arrive, "srv": srv, "order": order,
+                           "starts": starts})
+        w2 = _waits_jax(u2, v2)
+        for k, (rs, r2) in enumerate(zip(results_state, round2)):
+            if r2 is None:
+                continue
+            idx2, order, starts = rs["idx2"], r2["order"], r2["starts"]
+            arr_s, srv_s = r2["arrive"][order], r2["srv"][order]
+            w_s = np.asarray(w2[k, :idx2.size], dtype=np.float64)
+            rs["util"] = max(rs["util"],
+                             _util_max(arr_s, srv_s, w_s, starts))
+            w_rx = np.empty_like(w_s)
+            w_rx[order] = w_s
+            rs["wait"][idx2] += w_rx
+            rs["deliver"][idx2] = r2["arrive"] + w_rx + r2["srv"]
+
+    return [_metrics(jobs, flat, rs["wait"], rs["deliver"],
+                     rs["util"]) for rs in results_state]

@@ -21,15 +21,33 @@ prefix-sum/prefix-min per server. NIC RX arrivals are TX departures +
 switch latency, so the two passes stay acyclic. (The paper's single-server
 NIC is split into full-duplex TX/RX servers — matching real InfiniBand
 HCAs; see DESIGN.md §2.)
+
+Backends (DESIGN.md §8):
+
+* ``loop``      — the original per-server Python loop over Lindley slices.
+  Kept as the bit-faithful reference and the benchmark baseline.
+* ``segmented`` — numpy segmented max-plus scan over ALL servers at once
+  (``repro.core.sim_scan``); no per-server Python loop, flat-message cache.
+* ``jax``       — ``jax.lax.associative_scan`` over the same max-plus
+  elements; batches K candidate placements in one device call
+  (``simulate_batch``).
+* ``pallas``    — the ``repro.kernels.lindley_scan`` chunked Pallas kernel
+  (float32; validated via ``interpret=True`` like ``ssd_scan``).
+* ``auto``      — ``segmented`` on CPU-only hosts, ``jax`` when an
+  accelerator is attached. ``REPRO_SIM_BACKEND`` overrides.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
 from typing import Sequence
 
 import numpy as np
 
-from .graphs import AppGraph, ClusterTopology, Placement
+from .graphs import AppGraph, ClusterTopology, Placement, tie_phase
+
+BACKENDS = ("loop", "segmented", "jax", "pallas")
 
 
 @dataclasses.dataclass
@@ -47,6 +65,57 @@ class SimResult:
         return self.total_wait * 1e3
 
 
+def _jax_importable() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover - env without jax
+        return False
+
+
+def _accelerator_attached() -> bool:
+    try:
+        import jax
+        return any(d.platform != "cpu" for d in jax.devices())
+    except Exception:  # pragma: no cover - env without jax
+        return False
+
+
+_AUTO_BACKEND: str | None = None
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve a backend name (``auto``/None/env override -> concrete)."""
+    global _AUTO_BACKEND
+    backend = backend or "auto"
+    if backend == "auto":
+        env = os.environ.get("REPRO_SIM_BACKEND", "").strip()
+        if env and env != "auto":
+            backend = env
+        elif _AUTO_BACKEND is not None:
+            backend = _AUTO_BACKEND
+        elif "jax" not in sys.modules:
+            # nothing has imported jax yet -> no accelerator runtime is in
+            # play; answer "segmented" WITHOUT initializing jax (and don't
+            # memoize — jax may be imported later in the process)
+            backend = "segmented"
+        else:
+            # numpy segmented wins on CPU (no dispatch/compile overhead);
+            # the JAX scan pays off on a real accelerator
+            _AUTO_BACKEND = ("jax" if _accelerator_attached()
+                             else "segmented")
+            backend = _AUTO_BACKEND
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown sim backend {backend!r}; known: {BACKENDS}")
+    if backend in ("jax", "pallas") and not _jax_importable():
+        # only explicit (arg/env) requests can reach here — "auto" never
+        # picks jax without jax importable. Fail loudly rather than
+        # silently run segmented while claiming jax numbers.
+        raise ImportError(f"sim backend {backend!r} requires jax; "
+                          f"install jax or use backend='auto'")
+    return backend
+
+
 def _lindley_waits(arrival: np.ndarray, service: np.ndarray) -> np.ndarray:
     """FIFO waits for one server given sorted arrival and service times."""
     n = arrival.shape[0]
@@ -59,7 +128,7 @@ def _lindley_waits(arrival: np.ndarray, service: np.ndarray) -> np.ndarray:
 
 def _server_pass(server_id: np.ndarray, arrival: np.ndarray,
                  service: np.ndarray):
-    """Vectorised per-server Lindley pass.
+    """Per-server Lindley pass (Python loop over servers — loop backend).
 
     Returns (wait, busy_per_server dict) aligned with the input order.
     """
@@ -86,13 +155,47 @@ def _server_pass(server_id: np.ndarray, arrival: np.ndarray,
 
 def simulate(jobs: Sequence[AppGraph], placement: Placement,
              cluster: ClusterTopology | None = None,
-             count_scale: float = 1.0) -> SimResult:
+             count_scale: float = 1.0, backend: str = "auto") -> SimResult:
     """Run the queueing model for a placed workload.
 
     ``count_scale`` scales every pair's message count (e.g. 0.1 -> 10x fewer
     messages) for faster experimentation; relative comparisons between
-    mapping strategies are preserved.
+    mapping strategies are preserved. ``backend`` selects the Lindley-pass
+    implementation (module docstring); all backends agree on the metrics to
+    float tolerance.
     """
+    backend = resolve_backend(backend)
+    if backend == "loop":
+        return _simulate_loop(jobs, placement, cluster, count_scale)
+    from . import sim_scan
+    return sim_scan.simulate_scan(jobs, placement, cluster, count_scale,
+                                  backend=backend)
+
+
+def simulate_batch(jobs: Sequence[AppGraph], placements: Sequence[Placement],
+                   cluster: ClusterTopology | None = None,
+                   count_scale: float = 1.0,
+                   backend: str = "auto") -> list[SimResult]:
+    """Score K candidate placements of the SAME job set in one shot.
+
+    The scheduler's remap pass uses this to evaluate many trial moves per
+    pass. On the ``jax`` backend the K per-placement Lindley passes are
+    stacked and run as ONE batched associative scan; numpy backends fall
+    back to a fast per-placement loop that still reuses the flat-message
+    cache (flattening is the dominant host cost).
+    """
+    backend = resolve_backend(backend)
+    if backend == "jax":
+        from . import sim_scan
+        return sim_scan.simulate_scan_batch(jobs, placements, cluster,
+                                            count_scale)
+    return [simulate(jobs, p, cluster, count_scale, backend=backend)
+            for p in placements]
+
+
+def _simulate_loop(jobs: Sequence[AppGraph], placement: Placement,
+                   cluster: ClusterTopology | None = None,
+                   count_scale: float = 1.0) -> SimResult:
     cluster = cluster or placement.cluster
     placement.validate()
 
@@ -105,8 +208,8 @@ def simulate(jobs: Sequence[AppGraph], placement: Placement,
             n = max(1, int(round(job.cnt[i, j] * count_scale)))
             rate = job.lam[i, j]
             period = 1.0 / rate if rate > 0 else 0.0
-            # deterministic per-sender phase breaks simultaneous-tick ties
-            phase = (int(i) * 7919 % 104729) * 1e-9
+            # deterministic per-(job, sender) phase breaks simultaneous ticks
+            phase = float(tie_phase(job.job_id, int(i)))
             t = phase + np.arange(n) * period
             emits.append(t)
             job_ids.append(np.full(n, job.job_id, dtype=np.int32))

@@ -16,11 +16,15 @@ event-driven scheduler (DESIGN.md §3):
   and the new job's simulated finish time becomes its departure timestamp
   — the simulator is the scheduler's clock.
 * **Remap passes** run periodically: when the simulator's projected peak
-  channel (NIC) utilisation exceeds a threshold, the worst-contended live
-  job (largest simulated message wait) is trially re-placed into the
-  current free pool. The move is committed only if the projected wait
-  reduction exceeds an explicit migration cost — process state moved over
-  the NIC, ``state_bytes_per_proc x procs-that-change-node / nic_bw``.
+  channel (NIC) utilisation exceeds a threshold, up to
+  ``remap_candidates`` of the most-contended live jobs are trially
+  re-placed into the current free pool and scored in one
+  ``simulate_batch`` call (a single batched scan on the JAX backend).
+  The best move is committed only if the projected wait reduction exceeds
+  an explicit migration cost — process state moved over the NIC,
+  ``state_bytes_per_proc x procs-that-change-node / nic_bw``.
+  ``sim_backend`` selects the simulator backend for every projection
+  (DESIGN.md §8; ``auto`` -> segmented scan on CPU).
 
 Determinism: no wall clock, no unseeded randomness — identical traces
 yield identical schedules, which the tests rely on.
@@ -35,7 +39,7 @@ import numpy as np
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
 from ..core.mapping import STRATEGIES
-from ..core.simulator import simulate
+from ..core.simulator import resolve_backend, simulate, simulate_batch
 from ..core.workloads import Arrival
 from .events import ARRIVAL, DEPARTURE, REMAP, Event, EventQueue
 
@@ -164,7 +168,9 @@ class FleetScheduler:
                  migration_cost_factor: float = 1.0,
                  max_migrations_per_job: int = 1,
                  state_bytes_per_proc: float = 64 * MB,
-                 count_scale: float = 0.02):
+                 count_scale: float = 0.02,
+                 sim_backend: str = "auto",
+                 remap_candidates: int = 4):
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
         self._strategy = resolve_strategy(strategy)
@@ -176,6 +182,8 @@ class FleetScheduler:
         self.max_migrations_per_job = max_migrations_per_job
         self.state_bytes_per_proc = state_bytes_per_proc
         self.count_scale = count_scale
+        self.sim_backend = resolve_backend(sim_backend)
+        self.remap_candidates = max(1, remap_candidates)
 
         self.now = 0.0
         self.live: dict[int, SchedJob] = {}
@@ -296,7 +304,8 @@ class FleetScheduler:
         """Admit + derive the departure time from the queueing simulator."""
         self.admit(job.graph, now=self.now)
         res = simulate(self._live_graphs(), self.placement, self.cluster,
-                       count_scale=self.count_scale)
+                       count_scale=self.count_scale,
+                       backend=self.sim_backend)
         duration = max(res.job_finish[job.job_id], 1e-9)
         job.msg_wait = res.per_job_wait[job.job_id]
         job.departure = self.now + duration
@@ -315,49 +324,84 @@ class FleetScheduler:
             self._remap_scheduled = True
 
     def _remap_pass(self) -> None:
-        """Re-place the worst-contended job when projected utilisation is
-        over threshold AND the wait reduction pays for the migration."""
+        """Re-place contended jobs when projected utilisation is over
+        threshold AND the wait reduction pays for the migration.
+
+        Up to ``remap_candidates`` trial moves (the most-contended live
+        jobs, each re-placed into the current free pool) are scored in ONE
+        ``simulate_batch`` call — on the JAX backend that is a single
+        batched scan, so K candidates cost about as much as one. The best
+        net-gain candidate is committed if profitable.
+        """
         if len(self.live) < 2:
             return
         live = self._live_graphs()
         res = simulate(live, self.placement, self.cluster,
-                       count_scale=self.count_scale)
+                       count_scale=self.count_scale,
+                       backend=self.sim_backend)
         self._util_samples.append(res.max_server_utilisation)
         if res.max_server_utilisation < self.util_threshold:
             return
-        # worst-contended job still under its migration budget (thrash guard)
+        # most-contended jobs still under their migration budget
         movable = [j for j in res.per_job_wait
                    if self.live[j].n_migrations < self.max_migrations_per_job]
         if not movable:
             return
-        worst_id = max(movable, key=lambda j: (res.per_job_wait[j], j))
-        job = self.live[worst_id]
+        movable.sort(key=lambda j: (res.per_job_wait[j], j), reverse=True)
         snap = self.tracker.snapshot()
-        old_cores = job.cores
-        self.tracker.release_cores(old_cores)
-        try:
-            local = self._strategy([job.graph], self.cluster, self.tracker)
-        except RuntimeError:
-            self.tracker.restore(snap)
+        candidates = []               # (job_id, old_cores, new_cores, moved)
+        for jid in movable[:self.remap_candidates]:
+            job = self.live[jid]
+            self.tracker.release_cores(job.cores)
+            try:
+                local = self._strategy([job.graph], self.cluster,
+                                       self.tracker)
+            except RuntimeError:
+                continue
+            finally:
+                self.tracker.restore(snap)
+            new_cores = local.assignments[jid]
+            moved = int((self.cluster.node_of(new_cores)
+                         != self.cluster.node_of(job.cores)).sum())
+            candidates.append((jid, job.cores, new_cores, moved))
+        if not candidates:
             return
-        new_cores = local.assignments[worst_id]
-        moved = int((self.cluster.node_of(new_cores)
-                     != self.cluster.node_of(old_cores)).sum())
-        bytes_moved = moved * job.state_bytes_per_proc
-        migration_time = bytes_moved / self.cluster.nic_bw
-        trial = self.placement.copy()
-        trial.assign(worst_id, new_cores)
-        res_new = simulate(live, trial, self.cluster,
-                           count_scale=self.count_scale)
-        gain = res.total_wait - res_new.total_wait
-        commit = moved > 0 and gain > migration_time * self.migration_cost_factor
+        trials = []
+        for jid, _, new_cores, _ in candidates:
+            trial = self.placement.copy()
+            trial.assign(jid, new_cores)
+            trials.append(trial)
+        scored = simulate_batch(live, trials, self.cluster,
+                                count_scale=self.count_scale,
+                                backend=self.sim_backend)
+        best = None        # best committable candidate (actual moves only)
+        best_any = None    # best overall, recorded when nothing commits
+        for (jid, old_cores, new_cores, moved), res_new in zip(candidates,
+                                                               scored):
+            bytes_moved = moved * self.live[jid].state_bytes_per_proc
+            migration_time = bytes_moved / self.cluster.nic_bw
+            gain = res.total_wait - res_new.total_wait
+            net = gain - migration_time * self.migration_cost_factor
+            entry = (net, jid, old_cores, new_cores, moved, bytes_moved,
+                     migration_time, gain, res_new)
+            if best_any is None or net > best_any[0]:
+                best_any = entry
+            committable = moved > 0 and gain > migration_time \
+                * self.migration_cost_factor
+            if committable and (best is None or net > best[0]):
+                best = entry
+        commit = best is not None
+        (_, worst_id, old_cores, new_cores, moved, bytes_moved,
+         migration_time, gain, res_new) = best if commit else best_any
+        job = self.live[worst_id]
         self.decisions.append(RemapDecision(
             time=self.now, job_id=worst_id, wait_gain=gain,
             bytes_moved=bytes_moved, migration_time=migration_time,
             committed=commit))
         if not commit:
-            self.tracker.restore(snap)
             return
+        self.tracker.release_cores(old_cores)
+        self.tracker.take_cores(new_cores)
         self.placement.assign(worst_id, new_cores)
         job.cores = new_cores
         job.n_migrations += 1

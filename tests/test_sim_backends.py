@@ -1,0 +1,250 @@
+"""Backend equivalence: loop vs segmented vs jax (vs pallas) simulators.
+
+Property tests drive random multi-job workloads through every backend and
+require identical metrics within per-backend float tolerance (the scan
+backends re-associate sums; pallas runs in float32). The ICI/pod routing
+path and the batched candidate evaluation are covered explicitly.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned image lacks hypothesis — deterministic fallback
+    from repro.testing import given, settings, strategies as st
+
+from repro.core import ClusterTopology, Placement, simulate, simulate_batch
+from repro.core.graphs import AppGraph, PATTERNS, tie_phase
+from repro.core.simulator import BACKENDS, resolve_backend
+
+KB = 1 << 10
+MB = 1 << 20
+
+# f64 backends re-associate the same sums; pallas is f32
+TOL = {"segmented": 1e-9, "jax": 1e-6, "pallas": 2e-3}
+
+
+def _random_workload(rng: np.random.Generator, cluster: ClusterTopology,
+                     n_jobs: int):
+    """Random jobs + a random valid placement on the cluster."""
+    jobs, used = [], []
+    free = list(range(cluster.n_cores))
+    rng.shuffle(free)
+    placement = Placement(cluster)
+    for jid in range(n_jobs):
+        procs = int(rng.integers(2, 9))
+        if procs > len(free):
+            break
+        pattern = PATTERNS[int(rng.integers(0, len(PATTERNS)))]
+        length = float(rng.choice([256.0, 64 * KB, 2 * MB]))
+        rate = float(rng.uniform(5.0, 200.0))
+        count = int(rng.integers(1, 30))
+        job = AppGraph.from_pattern(f"j{jid}", pattern, procs, length, rate,
+                                    count, job_id=jid)
+        cores = np.array([free.pop() for _ in range(procs)], dtype=np.int64)
+        placement.assign(jid, cores)
+        jobs.append(job)
+        used.append(cores)
+    return jobs, placement
+
+
+def _assert_close(a, b, rtol, what):
+    assert a == pytest.approx(b, rel=rtol, abs=rtol), \
+        f"{what}: {a} vs {b}"
+
+
+def _check_all_backends(jobs, placement, cluster, count_scale=1.0,
+                        backends=("segmented", "jax")):
+    base = simulate(jobs, placement, cluster, count_scale, backend="loop")
+    for be in backends:
+        res = simulate(jobs, placement, cluster, count_scale, backend=be)
+        rtol = TOL[be]
+        _assert_close(res.total_wait, base.total_wait, rtol,
+                      f"{be} total_wait")
+        _assert_close(res.workload_finish, base.workload_finish, rtol,
+                      f"{be} workload_finish")
+        _assert_close(res.max_server_utilisation,
+                      base.max_server_utilisation, rtol, f"{be} util")
+        assert res.n_messages == base.n_messages
+        for jid in base.job_finish:
+            _assert_close(res.job_finish[jid], base.job_finish[jid], rtol,
+                          f"{be} job_finish[{jid}]")
+            _assert_close(res.per_job_wait[jid], base.per_job_wait[jid],
+                          max(rtol, rtol * base.per_job_wait[jid]),
+                          f"{be} per_job_wait[{jid}]")
+    return base
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_backends_agree_random_workloads(seed, n_jobs):
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=4)
+    jobs, placement = _random_workload(rng, cluster, n_jobs)
+    if not jobs:
+        return
+    _check_all_backends(jobs, placement, cluster)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_backends_agree_ici_pod_path(seed):
+    """TPU-fleet routing: same-pod ICI + pod-crossing NIC, both rounds."""
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=8, pods=2, ici_bw=50e9,
+                              cache_msg_cap=float(1 << 19))
+    jobs, placement = _random_workload(rng, cluster, 4)
+    if not jobs:
+        return
+    base = _check_all_backends(jobs, placement, cluster)
+    assert base.n_messages > 0
+
+
+def test_backends_agree_pallas_smoke():
+    """One deterministic workload through the Pallas kernel (float32)."""
+    rng = np.random.default_rng(7)
+    cluster = ClusterTopology(n_nodes=4)
+    jobs, placement = _random_workload(rng, cluster, 4)
+    _check_all_backends(jobs, placement, cluster, backends=("pallas",))
+
+
+def test_tie_phase_keys_on_job_and_rank():
+    """Identical ranks in different jobs must NOT collide (the old bug)."""
+    ranks = np.arange(64)
+    p0 = tie_phase(0, ranks)
+    p1 = tie_phase(1, ranks)
+    assert not np.any(p0 == p1)
+    # scalar and vector forms agree
+    assert float(tie_phase(3, 5)) == float(tie_phase(3, np.array([5]))[0])
+
+
+def test_same_rank_different_jobs_not_simultaneous():
+    """Two identical jobs on symmetric cores: their senders' emissions
+    must not tick at identical instants (phase keyed on job AND rank)."""
+    j0 = AppGraph.from_pattern("a", "linear", 2, 64 * KB, 10.0, 5, job_id=0)
+    j1 = AppGraph.from_pattern("b", "linear", 2, 64 * KB, 10.0, 5, job_id=1)
+    e0 = j0.flat_messages().emit
+    e1 = j1.flat_messages().emit
+    assert not np.any(np.isin(e0, e1))
+
+
+def test_flat_messages_cached_and_matches_loop_expansion():
+    job = AppGraph.from_pattern("j", "all_to_all", 6, 64 * KB, 25.0, 9,
+                                job_id=3)
+    fm1 = job.flat_messages(0.5)
+    fm2 = job.flat_messages(0.5)
+    assert fm1 is fm2                      # cached per count_scale
+    assert job.flat_messages(1.0) is not fm1
+    # expansion matches the loop backend's per-pair python expansion
+    src, dst = np.nonzero(job.cnt)
+    n_expected = sum(max(1, int(round(job.cnt[i, j] * 0.5)))
+                     for i, j in zip(src, dst))
+    assert fm1.n_messages == n_expected
+    assert fm1.n_pairs == src.size
+    k = 0
+    for i, j in zip(src, dst):
+        n = max(1, int(round(job.cnt[i, j] * 0.5)))
+        t = float(tie_phase(job.job_id, int(i))) \
+            + np.arange(n) * (1.0 / job.lam[i, j])
+        np.testing.assert_array_equal(fm1.emit[k:k + n], t)
+        assert (fm1.src[k:k + n] == i).all()
+        assert (fm1.dst[k:k + n] == j).all()
+        k += n
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5))
+def test_simulate_batch_matches_individual(seed, k):
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=4)
+    jobs, placement = _random_workload(rng, cluster, 4)
+    if not jobs:
+        return
+    trials = []
+    for i in range(k):
+        p = placement.copy()
+        jid = jobs[i % len(jobs)].job_id
+        cores = p.assignments[jid].copy()
+        rng.shuffle(cores)
+        p.assign(jid, cores)
+        trials.append(p)
+    for be in ("segmented", "jax"):
+        batched = simulate_batch(jobs, trials, cluster, backend=be)
+        for res, p in zip(batched, trials):
+            ref = simulate(jobs, p, cluster, backend="loop")
+            _assert_close(res.total_wait, ref.total_wait, TOL[be],
+                          f"batch[{be}] total_wait")
+            _assert_close(res.workload_finish, ref.workload_finish,
+                          TOL[be], f"batch[{be}] workload_finish")
+
+
+def test_order_by_server_arrival_repairs_ties_to_original_order():
+    """Equal (server, arrival) runs must order by original index — the
+    loop backend's lexsort semantics — despite the unstable first pass."""
+    from repro.core.sim_scan import _order_by_server_arrival
+    rng = np.random.default_rng(0)
+    n = 4000
+    sid = rng.integers(0, 4, n)
+    arrival = rng.integers(0, 8, n).astype(np.float64)   # many exact ties
+    got = _order_by_server_arrival(sid, arrival)
+    want = np.lexsort((arrival, sid))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_scan_tie_repair_matches_loop_on_colliding_phases():
+    """Jobs built to EMIT at identical instants (same job_id -> same
+    phases) exercise the in-scan tie repair against the loop backend."""
+    L = np.zeros((6, 6))
+    lam = np.zeros((6, 6))
+    cnt = np.zeros((6, 6), dtype=np.int64)
+    for i, j in ((0, 3), (1, 4), (2, 5)):       # 3 senders, 1 receiver node
+        L[i, j] = 1 * MB
+        lam[i, j] = 50.0
+        cnt[i, j] = 20
+    cluster = ClusterTopology(n_nodes=4)
+    # same job_id twice is invalid in one Placement; instead craft one job
+    # whose senders share a phase by construction: same rank emits to two
+    # receivers at identical instants through the SAME NIC
+    L[0, 4] = 2 * MB
+    lam[0, 4] = 50.0
+    cnt[0, 4] = 20
+    job = AppGraph("tie", L, lam, cnt, job_id=0)
+    placement = Placement(cluster)
+    placement.assign(0, np.array([0, 1, 2, 16, 32, 48]))
+    _check_all_backends([job], placement, cluster)
+
+
+def test_scan_r2_tie_repair_cross_job_collision():
+    """Two jobs whose phases collide exactly (job_id 104729 wraps the
+    phase modulus) send equal-size messages from different TX nodes to one
+    RX node: their RX arrivals tie EXACTLY and the waits {0, s} land on
+    one job or the other depending on tie order — the scan backends must
+    attribute them the way the loop backend's stable sort does."""
+    assert float(tie_phase(0, 0)) == float(tie_phase(104729, 0))
+    cluster = ClusterTopology(n_nodes=4)
+    jobs, placement = [], Placement(cluster)
+    # job 0 sends from the HIGHER tx node so the scan's r1-domain order
+    # disagrees with flattening order on the tied RX arrivals — the
+    # repair must restore flattening order or per-job waits come out wrong
+    for jid, (s_core, r_core) in ((0, (16, 32)), (104729, (0, 33))):
+        job = AppGraph.from_pattern(f"j{jid}", "linear", 2, 64 * KB, 10.0,
+                                    15, job_id=jid)
+        placement.assign(jid, np.array([s_core, r_core]))
+        jobs.append(job)
+    base = _check_all_backends(jobs, placement, cluster)
+    assert base.total_wait > 0.0          # ties queued at the shared RX
+
+
+def test_resolve_backend():
+    assert resolve_backend("loop") == "loop"
+    assert resolve_backend("auto") in BACKENDS
+    assert resolve_backend(None) in BACKENDS
+    with pytest.raises(KeyError):
+        resolve_backend("omnetpp")
+
+
+def test_empty_workload_all_backends():
+    cluster = ClusterTopology(n_nodes=2)
+    for be in ("loop", "segmented", "jax"):
+        res = simulate([], Placement(cluster), cluster, backend=be)
+        assert res.total_wait == 0.0 and res.n_messages == 0
