@@ -21,7 +21,7 @@ import sys
 
 from repro.sched import FleetScheduler, TRACES, get_trace
 
-DEFAULT_STRATEGIES = ("blocked", "cyclic", "drb", "new")
+DEFAULT_STRATEGIES = ("blocked", "cyclic", "drb", "new", "recursive_bisect")
 
 
 def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
@@ -62,6 +62,15 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
         comparison["new_beats_blocked_and_cyclic"] = bool(
             "blocked" in results and "cyclic" in results
             and wait("new") < wait("blocked") and wait("new") < wait("cyclic"))
+    if "recursive_bisect" in results:
+        others = [s for s in results if s != "recursive_bisect"]
+        for base in others:
+            if wait(base) > 0:
+                comparison[f"rb_vs_{base}_msg_wait_gain"] = round(
+                    1.0 - wait("recursive_bisect") / wait(base), 4)
+        comparison["recursive_bisect_beats_all"] = bool(
+            others and all(wait("recursive_bisect") < wait(s)
+                           for s in others))
     return {
         "trace": trace_name,
         "params": {"seed": seed, "rate": rate, "n_arrivals": n_arrivals,

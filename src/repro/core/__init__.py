@@ -2,23 +2,29 @@
 
 Public surface:
   graphs     — AppGraph / ClusterTopology / Placement
-  mapping    — blocked / cyclic / drb / new_mapping (paper Fig. 1)
+  hierarchy  — NetLevel / NetworkHierarchy multi-level fabric (§9)
+  mapping    — blocked / cyclic / drb / new_mapping (paper Fig. 1) /
+               recursive_bisect (hierarchy-aware, §9)
   simulator  — queueing model of message waiting times (paper sec. 5);
                loop / segmented / jax / pallas backends + simulate_batch
   sim_scan   — segmented max-plus scan backends (DESIGN.md §8)
-  workloads  — paper Tables 2–9
+  workloads  — paper Tables 2–9 + the rack_oversub mix (§9)
   commgraph  — AppGraph derivation for JAX jobs (collective traffic)
   meshplan   — TPU fleet topology + device-order planning
 """
 from .graphs import (AppGraph, ClusterTopology, FlatMessages,
                      FreeCoreTracker, Placement, tie_phase)
-from .mapping import STRATEGIES, blocked, cyclic, drb, new_mapping
+from .hierarchy import NetLevel, NetworkHierarchy, default_hierarchy
+from .mapping import (STRATEGIES, blocked, cyclic, drb, new_mapping,
+                      recursive_bisect)
 from .simulator import (BACKENDS, SimResult, resolve_backend, simulate,
                         simulate_batch)
 
 __all__ = [
     "AppGraph", "ClusterTopology", "FlatMessages", "FreeCoreTracker",
     "Placement", "tie_phase",
+    "NetLevel", "NetworkHierarchy", "default_hierarchy",
     "STRATEGIES", "blocked", "cyclic", "drb", "new_mapping",
+    "recursive_bisect",
     "BACKENDS", "SimResult", "resolve_backend", "simulate", "simulate_batch",
 ]

@@ -274,6 +274,13 @@ class ClusterTopology:
     # at the per-node DCN NIC — the "many cores, one NIC" regime at TPU scale.
     pods: int = 1
     ici_bw: float | None = None          # None -> all inter-node via NIC
+    # --- explicit network hierarchy (DESIGN.md §9) -------------------------
+    # None -> a default hierarchy equivalent to the fields above is
+    # synthesized (node NIC, or node ICI + express pod DCN). Set to a
+    # NetworkHierarchy to model deeper trees (chip/rack levels,
+    # oversubscribed uplinks); inter-node routing in every simulator
+    # backend then follows its LCA path rule.
+    hierarchy: "object | None" = None    # NetworkHierarchy | None
 
     @property
     def cores_per_node(self) -> int:
@@ -313,6 +320,19 @@ class ClusterTopology:
                     self.pod_of(cores))
             self._core_maps = maps
         return maps
+
+    def net_hierarchy(self):
+        """Resolved inter-node hierarchy (explicit field or the default).
+
+        Cached — topology fields are treated as immutable once routing
+        has started, matching :meth:`core_maps`.
+        """
+        hier = getattr(self, "_net_hier", None)
+        if hier is None:
+            from .hierarchy import default_hierarchy
+            hier = self.hierarchy or default_hierarchy(self)
+            self._net_hier = hier
+        return hier
 
 
 @dataclasses.dataclass

@@ -1,8 +1,11 @@
 """Process -> core mapping strategies.
 
-Implements the paper's Figure-1 algorithm (``new_mapping``) and the three
-comparison methods it evaluates against: ``blocked``, ``cyclic`` and ``drb``
-(dual recursive bipartitioning, the Scotch-style graph-partitioning mapper).
+Implements the paper's Figure-1 algorithm (``new_mapping``), the three
+comparison methods it evaluates against — ``blocked``, ``cyclic`` and
+``drb`` (dual recursive bipartitioning, the Scotch-style
+graph-partitioning mapper) — and ``recursive_bisect``, the
+hierarchy-aware recursive bisection over the cluster's explicit
+``NetworkHierarchy`` (DESIGN.md §9).
 
 Every strategy has the same signature::
 
@@ -162,6 +165,138 @@ def drb(jobs: Sequence[AppGraph], cluster: ClusterTopology,
 
 
 # ---------------------------------------------------------------------------
+# Recursive bisection over the network hierarchy (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def _bisect_sized(weights: np.ndarray, seed_order: np.ndarray,
+                  size_a: int) -> np.ndarray:
+    """Split vertices into sides of EXACTLY (size_a, n - size_a) vertices,
+    minimising the cut weight.
+
+    Same greedy growth + KL refinement as :func:`_bisect_greedy`, but the
+    target size follows the capacity of the hardware domain the A side
+    will land in instead of being n/2.
+    """
+    n = weights.shape[0]
+    size_a = max(0, min(n, size_a))
+    side = np.zeros(n, dtype=bool)
+    if size_a == 0:
+        return side
+    start = int(seed_order[0])
+    side[start] = True
+    conn = weights[start].copy()
+    for _ in range(size_a - 1):
+        conn_masked = np.where(side, -np.inf, conn)
+        nxt = int(np.argmax(conn_masked))
+        if not np.isfinite(conn_masked[nxt]):  # disconnected — take by order
+            remaining = [v for v in seed_order if not side[v]]
+            nxt = int(remaining[0])
+        side[nxt] = True
+        conn += weights[nxt]
+    for _ in range(2):                         # size-preserving KL sweeps
+        gain_a = weights[:, ~side].sum(axis=1) - weights[:, side].sum(axis=1)
+        gain_b = weights[:, side].sum(axis=1) - weights[:, ~side].sum(axis=1)
+        a_idx = np.where(side)[0]
+        b_idx = np.where(~side)[0]
+        if a_idx.size == 0 or b_idx.size == 0:
+            break
+        best_a = a_idx[int(np.argmax(gain_a[a_idx]))]
+        best_b = b_idx[int(np.argmax(gain_b[b_idx]))]
+        gain = gain_a[best_a] + gain_b[best_b] - 2 * weights[best_a, best_b]
+        if gain <= 0:
+            break
+        side[best_a] = False
+        side[best_b] = True
+    return side
+
+
+def _rb_domains(cluster: ClusterTopology) -> list[int]:
+    """Descending domain sizes (cores) the mapper recurses through:
+    hierarchy levels outermost-first, then node, then socket."""
+    sizes = {int(g) for g in cluster.net_hierarchy().group_cores}
+    sizes.add(cluster.cores_per_node)
+    sizes.add(cluster.cores_per_socket)
+    return sorted((s for s in sizes if s > 1), reverse=True)
+
+
+def _rb_assign(procs: np.ndarray, cores: np.ndarray, weights: np.ndarray,
+               sizes: list[int], out: np.ndarray) -> None:
+    """Top-down co-partition of processes and free cores.
+
+    At each domain size (pod → rack → node → socket): if the process set
+    fits inside the single candidate domain with the most free cores,
+    descend into it (locality first — never cross a level that can be
+    avoided); otherwise bisect the domains into two capacity-balanced
+    halves and split the processes with a cut-minimising sized bisection,
+    so the traffic crossing that level's (possibly oversubscribed) links
+    is as small as the partitioner can make it.
+    """
+    if len(procs) == 0:
+        return
+    if len(procs) == 1:
+        out[procs[0]] = cores[0]
+        return
+    while sizes:
+        g = sizes[0]
+        groups, counts = np.unique(cores // g, return_counts=True)
+        if len(groups) == 1:
+            sizes = sizes[1:]
+            continue
+        fits = counts >= len(procs)
+        if fits.any():
+            # most-free candidate domain that holds the whole job slice
+            best = groups[fits][int(np.argmax(counts[fits]))]
+            _rb_assign(procs, cores[cores // g == best], weights,
+                       sizes[1:], out)
+            return
+        # split domains into two capacity-balanced halves (group order =
+        # hardware order, so halves stay topologically contiguous)
+        half = np.cumsum(counts) <= counts.sum() / 2
+        if not half.any():
+            half[0] = True
+        if half.all():
+            half[-1] = False
+        left = np.isin(cores // g, groups[half])
+        cap_l = int(left.sum())
+        cap_r = len(cores) - cap_l
+        n = len(procs)
+        target = int(round(n * cap_l / (cap_l + cap_r)))
+        target = max(n - cap_r, min(cap_l, target))
+        sub = weights[np.ix_(procs, procs)]
+        order = np.argsort(-sub.sum(axis=1), kind="stable")
+        side = _bisect_sized(sub, order, target)
+        _rb_assign(procs[side], cores[left], weights, sizes, out)
+        _rb_assign(procs[~side], cores[~left], weights, sizes, out)
+        return
+    out[procs] = cores[:len(procs)]
+
+
+def recursive_bisect(jobs: Sequence[AppGraph], cluster: ClusterTopology,
+                     tracker: Optional[FreeCoreTracker] = None) -> Placement:
+    """Hierarchy-aware recursive bisection (DESIGN.md §9).
+
+    Unlike :func:`drb` — which grabs the first compact block of free
+    cores and halves it by core id — this mapper walks the explicit
+    ``NetworkHierarchy`` top-down: a job that fits inside one pod / rack
+    / node never crosses that level, and a job that must split is cut
+    where its communication graph is thinnest, level by level. On
+    oversubscribed trees that directly minimises the bytes queued at the
+    scarce uplinks.
+    """
+    placement = Placement(cluster)
+    tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
+    sizes = _rb_domains(cluster)
+    for job in jobs:
+        free = np.flatnonzero(~tracker.used)
+        if free.size < job.n_procs:
+            raise RuntimeError("cluster full")
+        out = np.full(job.n_procs, -1, dtype=np.int64)
+        _rb_assign(np.arange(job.n_procs), free, job.sym_demand, sizes, out)
+        tracker.take_cores(out)
+        placement.assign(job.job_id, out)
+    return placement
+
+
+# ---------------------------------------------------------------------------
 # The paper's new mapping strategy (Figure 1)
 # ---------------------------------------------------------------------------
 def job_threshold(job: AppGraph, tracker: FreeCoreTracker,
@@ -253,4 +388,5 @@ STRATEGIES: dict[str, Strategy] = {
     "cyclic": cyclic,
     "drb": drb,
     "new": new_mapping,
+    "recursive_bisect": recursive_bisect,
 }

@@ -188,7 +188,12 @@ class MeshPlanResult:
 
 def chip_metrics(ag: AppGraph, cores: np.ndarray,
                  topo: ClusterTopology) -> dict:
-    """Static contention metrics for one job mapped to chips."""
+    """Static contention metrics for one job mapped to chips.
+
+    ``level_loads`` reports per-hierarchy-level link pressure (max and
+    total bytes/s over that level's TX/RX servers, DESIGN.md §9); the
+    flat ``dcn/ici/nic`` keys keep their historical pod-boundary meaning.
+    """
     demand = ag.demand                       # bytes/s between logical procs
     src, dst = np.nonzero(demand)
     s_core, r_core = cores[src], cores[dst]
@@ -201,6 +206,9 @@ def chip_metrics(ag: AppGraph, cores: np.ndarray,
     np.add.at(nic_tx, s_node[cross_pod], vals[cross_pod])
     nic_rx = np.zeros(topo.n_nodes)
     np.add.at(nic_rx, r_node[cross_pod], vals[cross_pod])
+    loads = topo.net_hierarchy().link_loads(
+        s_core, r_core, vals, n_cores=topo.n_cores,
+        active=s_node != r_node)
     return {
         "dcn_bytes": float(vals[cross_pod].sum()),
         "ici_bytes": float(vals[inter_node].sum()),
@@ -208,6 +216,12 @@ def chip_metrics(ag: AppGraph, cores: np.ndarray,
         "max_nic_load": float(max(nic_tx.max(), nic_rx.max())),
         "mean_nic_load": float((nic_tx.sum() + nic_rx.sum())
                                / (2 * topo.n_nodes)),
+        "level_loads": {
+            name: {"max": float(max(d["tx"].max(), d["rx"].max())),
+                   "total": float(d["tx"].sum()),
+                   "utilisation": float(max(d["tx"].max(), d["rx"].max())
+                                        / d["bw"])}
+            for name, d in loads.items()},
     }
 
 
@@ -235,8 +249,9 @@ def compare_strategies(cfg: ModelConfig, shape: ShapeSpec,
                        mesh_axes: dict[str, int],
                        topo: Optional[ClusterTopology] = None,
                        strategies: Sequence[str] = ("blocked", "cyclic",
-                                                    "drb", "new",
-                                                    "new_tpu")) -> dict:
+                                                    "drb", "new", "new_tpu",
+                                                    "recursive_bisect"),
+                       ) -> dict:
     return {s: plan_device_order(cfg, shape, mesh_axes, topo, s)
             for s in strategies}
 
@@ -303,20 +318,38 @@ def place_jobs(jobs: Sequence[JobSpec], topo: ClusterTopology,
 
 def fleet_nic_load(placement: Placement, graphs: Sequence[AppGraph],
                    topo: ClusterTopology) -> dict:
-    """Aggregate per-host NIC load over all jobs (bytes/s, pod-crossing)."""
+    """Aggregate per-host NIC load over all jobs (bytes/s, pod-crossing).
+
+    ``level_utilisation`` adds the fleet-wide per-level view: for every
+    hierarchy level, the most-loaded link's share of that level's
+    bandwidth (DESIGN.md §9).
+    """
     nic = np.zeros(topo.n_nodes)
     ici = 0.0
+    hier = topo.net_hierarchy()
+    agg: dict[str, np.ndarray] = {}
     for g in graphs:
         cores = placement.assignments[g.job_id]
-        m = chip_metrics(g, cores, topo)
-        ici += m["ici_bytes"]
         demand = g.demand
         src, dst = np.nonzero(demand)
         s_core, r_core = cores[src], cores[dst]
+        vals = demand[src, dst]
+        inter = topo.node_of(s_core) != topo.node_of(r_core)
         cross = topo.pod_of(s_core) != topo.pod_of(r_core)
-        np.add.at(nic, topo.node_of(s_core)[cross], demand[src, dst][cross])
-        np.add.at(nic, topo.node_of(r_core)[cross], demand[src, dst][cross])
+        ici += float(vals[inter & ~cross].sum())
+        np.add.at(nic, topo.node_of(s_core)[cross], vals[cross])
+        np.add.at(nic, topo.node_of(r_core)[cross], vals[cross])
+        for name, d in hier.link_loads(s_core, r_core, vals,
+                                       n_cores=topo.n_cores,
+                                       active=inter).items():
+            agg[name + "/tx"] = agg.get(name + "/tx", 0.0) + d["tx"]
+            agg[name + "/rx"] = agg.get(name + "/rx", 0.0) + d["rx"]
+    level_util = {
+        lv.name: float(max(np.max(agg[lv.name + "/tx"]),
+                           np.max(agg[lv.name + "/rx"])) / lv.bw)
+        for lv in hier.levels if lv.name + "/tx" in agg}
     return {"max_nic_load": float(nic.max()),
             "total_dcn_bytes": float(nic.sum() / 2),
             "ici_bytes": float(ici),
-            "nic_utilisation": float(nic.max() / topo.nic_bw)}
+            "nic_utilisation": float(nic.max() / topo.nic_bw),
+            "level_utilisation": level_util}

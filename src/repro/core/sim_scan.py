@@ -27,10 +27,14 @@ Three implementations of the scan:
 * ``pallas``    — ``repro.kernels.lindley_scan``: the same elements through
   a chunked Pallas TPU kernel (float32; ``interpret=True`` on CPU).
 
-Routing gives every message a *round-1* server (cache / memory / ICI-TX /
-NIC-TX — disjoint id spaces) and inter-node messages a *round-2* RX server;
-round 2's arrivals are round 1's departures + switch latency, so the whole
-simulator is exactly two scans regardless of cluster size.
+Routing gives every message a *stage-0* server (cache / memory / its first
+hierarchy hop — disjoint id spaces form the scan's per-level server axis)
+and inter-node messages further stages along the ``NetworkHierarchy`` LCA
+path (DESIGN.md §9): hierarchy hops merge greedily into multi-server
+passes wherever no message takes two of them, so the default flat/TPU
+configs still run as exactly two scans, and an L-level tree needs at most
+2L regardless of cluster size. Each stage's arrivals are the previous
+stage's departures (+ the LCA level's latency at the apex).
 
 Per-workload host arrays (flattened messages, the arrival-time sort order)
 are placement-independent; they are cached keyed on the live job set so the
@@ -135,15 +139,42 @@ def _flatten(jobs: Sequence[AppGraph], count_scale: float) -> _WorkloadFlat:
 # ---------------------------------------------------------------------------
 # Routing
 # ---------------------------------------------------------------------------
+class _Stage:
+    """One post-stage-0 multi-server Lindley pass, at PAIR granularity.
+
+    Merged hierarchy hops with disjoint pair masks (and disjoint server
+    id blocks), flattened into dense per-pair arrays.
+    """
+
+    __slots__ = ("mask", "sid", "service", "latency")
+
+    def __init__(self, hops):
+        self.mask = hops[0].mask.copy()
+        self.sid = np.where(hops[0].mask, hops[0].server, 0)
+        self.service = np.where(hops[0].mask, hops[0].service, 0.0)
+        self.latency = np.where(hops[0].mask, hops[0].latency, 0.0)
+        for h in hops[1:]:
+            self.mask |= h.mask
+            self.sid[h.mask] = h.server[h.mask]
+            self.service[h.mask] = h.service[h.mask]
+            self.latency[h.mask] = h.latency[h.mask]
+
+
 def _route(cluster: ClusterTopology, s_core: np.ndarray, r_core: np.ndarray,
            size: np.ndarray):
-    """Round-1 server id + service time per message, plus RX round info.
+    """Stage-0 server/service per message + later hierarchy stages.
 
-    Server id spaces are disjoint per channel so one scan covers them all:
-    ``[0, N*S)`` cache sockets, then mem, ICI-TX, NIC-TX node blocks.
-    Round 2 (two-stage messages only): ICI-RX then NIC-RX node blocks.
+    Server id spaces are disjoint so one scan covers any mix of levels:
+    ``[0, N*S)`` cache sockets, then memory nodes, then one
+    (level, direction) block per hierarchy hop (DESIGN.md §9 — the scan's
+    per-level server axis). Stage 0 holds every message's FIRST server
+    (cache / memory / first hierarchy hop with arrival == emit); each
+    later stage is fed by the previous stage's departures.
+
+    Returns ``(sid0, service0, stages)`` where ``stages`` is the list of
+    post-stage-0 :class:`_Stage` passes in topological order.
     """
-    node_map, sock_map, pod_map = cluster.core_maps()
+    node_map, sock_map, _ = cluster.core_maps()
     s_node = node_map[s_core]
     r_node = node_map[r_core]
     s_sock = sock_map[s_core]
@@ -154,17 +185,10 @@ def _route(cluster: ClusterTopology, s_core: np.ndarray, r_core: np.ndarray,
     via_cache = same_sock & (size <= cluster.cache_msg_cap)
     via_mem = same_node & ~via_cache
     inter = ~same_node
-    if cluster.ici_bw is not None and cluster.pods >= 1:
-        same_pod = pod_map[s_core] == pod_map[r_core]
-        via_ici = inter & same_pod
-        inter = inter & ~same_pod
-    else:
-        via_ici = np.zeros_like(inter)
 
     n_sock = cluster.n_nodes * cluster.sockets_per_node
     sid1 = np.empty(size.size, dtype=np.int64)
-    sid2 = np.zeros(size.size, dtype=np.int64)
-    service = np.empty(size.size, dtype=np.float64)
+    service = np.zeros(size.size, dtype=np.float64)
 
     if via_cache.any():
         sid1[via_cache] = s_node[via_cache] * cluster.sockets_per_node \
@@ -175,16 +199,25 @@ def _route(cluster: ClusterTopology, s_core: np.ndarray, r_core: np.ndarray,
                            1.0 + cluster.numa_remote_penalty, 1.0)
         sid1[via_mem] = n_sock + s_node[via_mem]
         service[via_mem] = size[via_mem] / cluster.mem_bw * penalty
-    if via_ici.any():
-        sid1[via_ici] = n_sock + cluster.n_nodes + s_node[via_ici]
-        sid2[via_ici] = r_node[via_ici]
-        service[via_ici] = size[via_ici] / cluster.ici_bw
-    if inter.any():
-        sid1[inter] = n_sock + 2 * cluster.n_nodes + s_node[inter]
-        sid2[inter] = cluster.n_nodes + r_node[inter]
-        service[inter] = size[inter] / cluster.nic_bw
 
-    return sid1, service, via_ici | inter, sid2
+    hier = cluster.net_hierarchy()
+    hops = hier.pair_hops(s_core, r_core, size, n_cores=cluster.n_cores,
+                          active=inter, server_base=n_sock + cluster.n_nodes)
+    merged = hier.merge_stages(hops)
+    first = merged[0] if merged else []
+    placed = via_cache | via_mem
+    for hop in first:
+        sid1[hop.mask] = hop.server[hop.mask]
+        service[hop.mask] = hop.service[hop.mask]
+        placed |= hop.mask
+    # messages whose first hop comes later (deep express configs), or that
+    # cross no modelled level: park them on one zero-service bypass server
+    # in stage 0 — waits stay exactly 0 there, the fast sorted path is
+    # preserved, and their deliver time seeds the later stage correctly.
+    if not placed.all():
+        sid1[~placed] = int(sid1[placed].max(initial=0)) + 1 if placed.any() \
+            else 0
+    return sid1, service, [_Stage(h) for h in merged[1:]]
 
 
 def _route_pairs(cluster: ClusterTopology, flat: _WorkloadFlat,
@@ -453,9 +486,9 @@ def simulate_scan(jobs: Sequence[AppGraph], placement: Placement,
     flat = _flatten(jobs, count_scale)
     if flat.n_messages == 0:
         return SimResult(0.0, {}, 0.0, {}, 0.0, 0, 0.0)
-    sid1_p, service_p, two_p, sid2_p = _route_pairs(cluster, flat, placement)
+    sid1_p, service_p, stages = _route_pairs(cluster, flat, placement)
 
-    # ---- round 1: every message at its first server ----------------------
+    # ---- stage 0: every message at its first server ----------------------
     order, po_s, starts, r = _round1_order(flat, sid1_p)
     arr_s = flat.emit_t[r]
     srv_s = service_p[po_s]
@@ -468,21 +501,20 @@ def simulate_scan(jobs: Sequence[AppGraph], placement: Placement,
     deliver = np.empty(n)
     deliver[order] = deliver_s
 
-    # ---- round 2: inter-node messages at their RX server -----------------
-    two_s = two_p[po_s]
-    if two_s.any():
-        sub = np.flatnonzero(two_s)           # positions in r1 sort order
-        rows = order[sub]                     # original message indices
-        arrive = deliver_s[sub] + cluster.switch_latency
-        srv2 = srv_s[sub]
-        sid2 = sid2_p[po_s[sub]]
-        # FIFO departures are monotone per r1 server, so ``arrive`` is a
-        # concatenation of ascending runs — timsort merges them cheaply
+    # ---- later stages: hierarchy hops fed by previous departures ---------
+    for stage in stages:
+        rows = np.flatnonzero(stage.mask[flat.pair_of])
+        po = flat.pair_of[rows]
+        arrive = deliver[rows] + stage.latency[po]
+        srv2 = stage.service[po]
+        sid2 = stage.sid[po]
+        # FIFO departures are monotone per previous server, so ``arrive``
+        # is a concatenation of ascending runs — timsort merges cheaply
         t2 = np.argsort(arrive, kind="stable")
         o2 = _stable_sid_sort(sid2, t2)
         sid2_s = sid2[o2]
         arr2_s = arrive[o2]
-        # the stable sort above keeps r1-sort order on ties; the loop
+        # the stable sort above keeps prior-stage order on ties; the loop
         # backend keeps ORIGINAL order — repair the (rare) tied runs
         if _repair_ties(o2, sid2_s, arr2_s, rank=rows):
             sid2_s = sid2[o2]
@@ -500,15 +532,24 @@ def simulate_scan(jobs: Sequence[AppGraph], placement: Placement,
 # ---------------------------------------------------------------------------
 # Batched candidate evaluation (JAX backend)
 # ---------------------------------------------------------------------------
+def _waits_batch(u: np.ndarray, v: np.ndarray, backend: str) -> np.ndarray:
+    if backend == "pallas":
+        return _waits_pallas(u, v)
+    return _waits_jax(u, v)
+
+
 def simulate_scan_batch(jobs: Sequence[AppGraph],
                         placements: Sequence[Placement],
                         cluster: ClusterTopology | None = None,
-                        count_scale: float = 1.0) -> list[SimResult]:
-    """Score K placements of one job set with TWO batched scan calls.
+                        count_scale: float = 1.0,
+                        backend: str = "jax") -> list[SimResult]:
+    """Score K placements of one job set with one batched scan per stage.
 
-    Placements share jobs and message count M, so round-1 rows stack into a
-    dense (K, M) batch; round-2 row lengths differ per placement (routing
-    differs) and are padded with identity elements past the real tail.
+    Placements share jobs and message count M, so stage-0 rows stack into
+    a dense (K, M) batch; later-stage row lengths differ per placement
+    (routing differs, and deeper hierarchies differ in stage count) and
+    are padded with identity elements past the real tail — the kernel's
+    level/batch row axis (DESIGN.md §9).
     """
     if not placements:
         return []
@@ -520,21 +561,19 @@ def simulate_scan_batch(jobs: Sequence[AppGraph],
         p.validate()
 
     K = len(placements)
-    rows = []                 # per-k state carried between the two rounds
+    rows = []                 # per-k state carried between stages
     u1 = np.empty((K, flat.n_messages))
     v1 = np.empty_like(u1)
     for k, p in enumerate(placements):
-        sid1_p, service_p, two_p, sid2_p = _route_pairs(cluster, flat, p)
+        sid1_p, service_p, stages = _route_pairs(cluster, flat, p)
         order, po_s, starts, r = _round1_order(flat, sid1_p)
         service = service_p[flat.pair_of]
         u1[k], v1[k] = _uv_elements(flat.emit_t[r], service_p[po_s], starts)
-        rows.append({"service": service, "two": two_p[flat.pair_of],
-                     "sid2": sid2_p[flat.pair_of],
+        rows.append({"service": service, "stages": stages,
                      "order": order, "starts": starts})
 
-    w1 = _waits_jax(u1, v1)
+    w1 = _waits_batch(u1, v1, backend)
     results_state = []
-    max_l2 = 0
     for k, st in enumerate(rows):
         order, starts = st["order"], st["starts"]
         arr_s, srv_s = flat.emit[order], st["service"][order]
@@ -543,41 +582,60 @@ def simulate_scan_batch(jobs: Sequence[AppGraph],
         wait = np.empty_like(w_s)
         wait[order] = w_s
         deliver = flat.emit + wait + st["service"]
-        idx2 = np.flatnonzero(st["two"])
-        results_state.append({"wait": wait, "deliver": deliver, "util": util,
-                              "idx2": idx2})
-        max_l2 = max(max_l2, idx2.size)
+        results_state.append({"wait": wait, "deliver": deliver, "util": util})
 
-    if max_l2:
-        u2 = np.zeros((K, max_l2))
-        v2 = np.full((K, max_l2), -np.inf)
-        round2 = []
-        for k, (st, rs) in enumerate(zip(rows, results_state)):
-            idx2 = rs["idx2"]
+    n_stages = max(len(st["stages"]) for st in rows)
+    for si in range(n_stages):
+        passes: list[dict | None] = [None] * K
+        ragged: list[tuple[np.ndarray, np.ndarray]] = []
+        for k, st in enumerate(rows):
+            if si >= len(st["stages"]):
+                continue
+            stage = st["stages"][si]
+            rs = results_state[k]
+            idx2 = np.flatnonzero(stage.mask[flat.pair_of])
             if idx2.size == 0:
-                round2.append(None)
                 continue
-            arrive = rs["deliver"][idx2] + cluster.switch_latency
-            srv = st["service"][idx2]
-            order = _order_by_server_arrival(st["sid2"][idx2], arrive)
-            starts = _segment_starts(st["sid2"][idx2][order])
-            u2[k, :idx2.size], v2[k, :idx2.size] = _uv_elements(
-                arrive[order], srv[order], starts)
-            round2.append({"arrive": arrive, "srv": srv, "order": order,
-                           "starts": starts})
-        w2 = _waits_jax(u2, v2)
-        for k, (rs, r2) in enumerate(zip(results_state, round2)):
-            if r2 is None:
+            po = flat.pair_of[idx2]
+            arrive = rs["deliver"][idx2] + stage.latency[po]
+            srv = stage.service[po]
+            sid2 = stage.sid[po]
+            order = _order_by_server_arrival(sid2, arrive)
+            starts = _segment_starts(sid2[order])
+            u, v = _uv_elements(arrive[order], srv[order], starts)
+            passes[k] = {"idx2": idx2, "arrive": arrive, "srv": srv,
+                         "order": order, "starts": starts,
+                         "row": len(ragged)}
+            ragged.append((u, v))
+        if not ragged:
+            continue
+        # stage rows are ragged (routing differs per placement) — pad
+        # with the max-plus identity onto one batched row axis
+        if backend == "pallas":
+            from ..kernels.lindley_scan import lindley_scan_rows
+            ws = lindley_scan_rows(ragged)
+        else:
+            max_l = max(u.size for u, _ in ragged)
+            u2 = np.zeros((len(ragged), max_l))
+            v2 = np.full((len(ragged), max_l), -np.inf)
+            for i, (u, v) in enumerate(ragged):
+                u2[i, :u.size] = u
+                v2[i, :v.size] = v
+            w2 = _waits_jax(u2, v2)
+            ws = [w2[i, :u.size] for i, (u, _) in enumerate(ragged)]
+        for k, p2 in enumerate(passes):
+            if p2 is None:
                 continue
-            idx2, order, starts = rs["idx2"], r2["order"], r2["starts"]
-            arr_s, srv_s = r2["arrive"][order], r2["srv"][order]
-            w_s = np.asarray(w2[k, :idx2.size], dtype=np.float64)
+            rs = results_state[k]
+            idx2, order, starts = p2["idx2"], p2["order"], p2["starts"]
+            arr_s, srv_s = p2["arrive"][order], p2["srv"][order]
+            w_s = np.asarray(ws[p2["row"]], dtype=np.float64)
             rs["util"] = max(rs["util"],
                              _util_max(arr_s, srv_s, w_s, starts))
             w_rx = np.empty_like(w_s)
             w_rx[order] = w_s
             rs["wait"][idx2] += w_rx
-            rs["deliver"][idx2] = r2["arrive"] + w_rx + r2["srv"]
+            rs["deliver"][idx2] = p2["arrive"] + w_rx + p2["srv"]
 
     return [_metrics(jobs, flat, rs["wait"], rs["deliver"],
                      rs["util"]) for rs in results_state]

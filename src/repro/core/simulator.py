@@ -7,8 +7,13 @@ model. Every shared channel is a FIFO server:
   cores of the same socket (paper Table 1 footnotes).
 * ``mem``    — one per node, ``mem_bw``; intra-node messages (large
   same-socket messages included); +10% NUMA penalty across sockets.
-* ``nic_tx`` / ``nic_rx`` — per node, ``nic_bw``; inter-node messages pass
-  sender TX -> (switch, 100 ns) -> receiver RX.
+* inter-node traffic queues along the cluster's explicit
+  ``NetworkHierarchy`` (DESIGN.md §9): full-duplex TX/RX server pairs at
+  every level the message crosses (core→chip→node→rack→pod, LCA path
+  rule, express levels for direct-attached NICs). The default hierarchy
+  reproduces the historical flat model exactly: per-node NIC TX ->
+  (switch latency) -> NIC RX, with the TPU-fleet ICI/DCN split as a
+  2-level node+express-pod instance.
 
 Waiting time of a message is the time it spends queued before service at
 each server on its path (the paper's main metric, summed over messages).
@@ -179,16 +184,17 @@ def simulate_batch(jobs: Sequence[AppGraph], placements: Sequence[Placement],
     """Score K candidate placements of the SAME job set in one shot.
 
     The scheduler's remap pass uses this to evaluate many trial moves per
-    pass. On the ``jax`` backend the K per-placement Lindley passes are
-    stacked and run as ONE batched associative scan; numpy backends fall
-    back to a fast per-placement loop that still reuses the flat-message
-    cache (flattening is the dominant host cost).
+    pass. On the ``jax`` and ``pallas`` backends the K per-placement
+    Lindley passes are stacked and run as ONE batched scan per stage
+    (ragged later stages pad onto the kernel row axis); numpy backends
+    fall back to a fast per-placement loop that still reuses the
+    flat-message cache (flattening is the dominant host cost).
     """
     backend = resolve_backend(backend)
-    if backend == "jax":
+    if backend in ("jax", "pallas"):
         from . import sim_scan
         return sim_scan.simulate_scan_batch(jobs, placements, cluster,
-                                            count_scale)
+                                            count_scale, backend=backend)
     return [simulate(jobs, p, cluster, count_scale, backend=backend)
             for p in placements]
 
@@ -235,14 +241,6 @@ def _simulate_loop(jobs: Sequence[AppGraph], placement: Placement,
     via_cache = same_sock & (size <= cluster.cache_msg_cap)
     via_mem = same_node & ~via_cache
     inter = ~same_node
-    # TPU-fleet mode: inter-node same-pod messages ride ICI, only
-    # pod-crossing messages queue at the per-node DCN NIC.
-    if cluster.ici_bw is not None and cluster.pods >= 1:
-        same_pod = cluster.pod_of(s_core) == cluster.pod_of(r_core)
-        via_ici = inter & same_pod
-        inter = inter & ~same_pod
-    else:
-        via_ici = np.zeros_like(inter)
 
     wait = np.zeros(M)
     deliver = np.empty(M)
@@ -269,32 +267,24 @@ def _simulate_loop(jobs: Sequence[AppGraph], placement: Placement,
         deliver[idx] = emit[idx] + w + service
         util += [b / s for b, s in busy.values()]
 
-    # ---- ICI (per-node aggregate server, same-pod inter-node) --------------
-    if via_ici.any():
-        idx = np.flatnonzero(via_ici)
-        service = size[idx] / cluster.ici_bw
-        w_tx, busy_tx = _server_pass(s_node[idx].astype(np.int64), emit[idx],
-                                     service)
-        depart = emit[idx] + w_tx + service
-        w_rx, busy_rx = _server_pass(r_node[idx].astype(np.int64),
-                                     depart + cluster.switch_latency, service)
-        wait[idx] += w_tx + w_rx
-        deliver[idx] = depart + cluster.switch_latency + w_rx + service
-        util += [b / s for b, s in busy_tx.values()]
-        util += [b / s for b, s in busy_rx.values()]
-
-    # ---- NIC TX then RX ----------------------------------------------------
+    # ---- inter-node: hierarchy LCA path (DESIGN.md §9) ---------------------
+    # One Lindley pass per hop in topological order (TX inner→outer, RX
+    # outer→inner); each message's arrival at a hop is its departure from
+    # the previous hop, plus the LCA level's latency once at the apex.
     if inter.any():
         idx = np.flatnonzero(inter)
-        service = size[idx] / cluster.nic_bw
-        w_tx, busy_tx = _server_pass(s_node[idx].astype(np.int64), emit[idx], service)
-        depart_tx = emit[idx] + w_tx + service
-        arrive_rx = depart_tx + cluster.switch_latency
-        w_rx, busy_rx = _server_pass(r_node[idx].astype(np.int64), arrive_rx, service)
-        wait[idx] += w_tx + w_rx
-        deliver[idx] = arrive_rx + w_rx + service
-        util += [b / s for b, s in busy_tx.values()]
-        util += [b / s for b, s in busy_rx.values()]
+        hops = cluster.net_hierarchy().pair_hops(
+            s_core[idx], r_core[idx], size[idx], n_cores=cluster.n_cores)
+        cur = emit[idx].copy()
+        for hop in hops:
+            m = hop.mask
+            service = hop.service[m]
+            arrive = cur[m] + hop.latency[m]
+            w, busy = _server_pass(hop.server[m], arrive, service)
+            wait[idx[m]] += w
+            cur[m] = arrive + w + service
+            util += [b / s for b, s in busy.values()]
+        deliver[idx] = cur
 
     # ---- metrics -----------------------------------------------------------
     per_job_wait: dict[int, float] = {}

@@ -154,6 +154,29 @@ def real_workload_4() -> list[AppGraph]:
 
 
 # ---------------------------------------------------------------------------
+# Rack-oversubscription mix (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def rack_oversub_mix() -> list[AppGraph]:
+    """Job mix for the oversubscribed-rack hierarchy scenario.
+
+    Sized against the `rack_oversub` cluster (8-core nodes, 4-node
+    racks): small jobs fit inside a node or rack, large ones are forced
+    across rack uplinks — the scarce, oversubscribed links where the
+    mapper's cut placement decides the waiting time. Pattern/length mix
+    follows the Table-4 heavy/light split.
+    """
+    rows = [
+        ("all_to_all", 24, 2 * MB, 10.0, 2000),
+        ("all_to_all", 12, 64 * KB, 100.0, 2000),
+        ("bcast_scatter", 16, 1 * MB, 20.0, 2000),
+        ("gather_reduce", 16, 64 * KB, 100.0, 2000),
+        ("linear", 48, 2 * MB, 10.0, 2000),
+        ("linear", 8, 64 * KB, 100.0, 2000),
+    ]
+    return _synt(rows)
+
+
+# ---------------------------------------------------------------------------
 # Arrival traces — dynamic job streams for the online scheduler
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)

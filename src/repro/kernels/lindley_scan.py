@@ -51,12 +51,38 @@ def _lindley_kernel(u_ref, v_ref, w_ref, carry_ref):
     carry_ref[0, 1] = tot_v[-1]
 
 
+def lindley_scan_rows(rows, *, chunk: int = 512,
+                      interpret: bool = True) -> list:
+    """Ragged batch: one kernel launch for rows of different lengths.
+
+    ``rows`` is a list of ``(u, v)`` 1-D element pairs — e.g. one row per
+    hierarchy level/stage or per candidate placement (DESIGN.md §9). Rows
+    are padded to a common length with the max-plus identity ``(0, -inf)``
+    (padding cannot change any real prefix) and stacked on the kernel's
+    row axis; returns the unpadded per-row waits.
+    """
+    import numpy as np
+    if not rows:
+        return []
+    n = max(u.shape[0] for u, _ in rows)
+    ub = np.zeros((len(rows), n), np.float32)
+    vb = np.full((len(rows), n), -np.inf, np.float32)
+    for i, (u, v) in enumerate(rows):
+        ub[i, :u.shape[0]] = u
+        vb[i, :v.shape[0]] = v
+    w = np.asarray(lindley_scan(ub, vb, chunk=chunk, interpret=interpret))
+    return [w[i, :u.shape[0]] for i, (u, _) in enumerate(rows)]
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def lindley_scan(u: jax.Array, v: jax.Array, *, chunk: int = 512,
                  interpret: bool = True) -> jax.Array:
     """Batched waits for max-plus element rows.
 
     u, v: (batch, n) map coefficients in sorted (server, arrival) order.
+    The batch axis carries whatever the caller stacks — K candidate
+    placements, independent hierarchy stages, or both (see
+    ``lindley_scan_rows`` for the ragged form).
     Returns W: (batch, n) float32 waiting times.
     """
     u = jnp.asarray(u, jnp.float32)

@@ -7,13 +7,14 @@ Public surface:
 """
 from .events import ARRIVAL, DEPARTURE, REMAP, Event, EventQueue
 from .scheduler import (FleetScheduler, FleetStats, RemapDecision, SchedJob,
-                        SchedulerInvariantError, projected_nic_loads,
-                        resolve_strategy)
+                        SchedulerInvariantError, projected_level_loads,
+                        projected_nic_loads, resolve_strategy)
 from .traces import TRACES, TraceSpec, get_trace
 
 __all__ = [
     "ARRIVAL", "DEPARTURE", "REMAP", "Event", "EventQueue",
     "FleetScheduler", "FleetStats", "RemapDecision", "SchedJob",
-    "SchedulerInvariantError", "projected_nic_loads", "resolve_strategy",
+    "SchedulerInvariantError", "projected_level_loads",
+    "projected_nic_loads", "resolve_strategy",
     "TRACES", "TraceSpec", "get_trace",
 ]

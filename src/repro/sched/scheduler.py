@@ -66,30 +66,49 @@ def resolve_strategy(strategy: StrategyLike) -> Callable[..., Placement]:
                    f"{sorted(STRATEGIES)} + ['new_tpu']")
 
 
-def projected_nic_loads(graphs: Sequence[AppGraph], placement: Placement,
-                        cluster: ClusterTopology) -> np.ndarray:
-    """Per-node NIC load (bytes/s, TX+RX) implied by current demand.
+def projected_level_loads(graphs: Sequence[AppGraph], placement: Placement,
+                          cluster: ClusterTopology) -> dict[str, dict]:
+    """Per-hierarchy-level link loads (bytes/s) implied by current demand.
 
-    Paper mode: every inter-node byte crosses a NIC. TPU mode
-    (``ici_bw`` set): only pod-crossing bytes do — same routing split as
-    the simulator.
+    For every level of the cluster's :class:`NetworkHierarchy`, sums each
+    link's TX and RX load over all live jobs along the simulator's LCA
+    path rule (DESIGN.md §9). Returns ``{level: {"tx", "rx", "bw"}}``.
     """
-    nic = np.zeros(cluster.n_nodes)
-    tpu_mode = cluster.ici_bw is not None and cluster.pods > 1
+    hier = cluster.net_hierarchy()
+    agg: dict[str, dict] = {}
     for g in graphs:
         cores = placement.assignments[g.job_id]
         demand = g.demand
         src, dst = np.nonzero(demand)
         s_core, r_core = cores[src], cores[dst]
-        s_node, r_node = cluster.node_of(s_core), cluster.node_of(r_core)
-        if tpu_mode:
-            cross = cluster.pod_of(s_core) != cluster.pod_of(r_core)
-        else:
-            cross = s_node != r_node
-        vals = demand[src, dst][cross]
-        np.add.at(nic, s_node[cross], vals)
-        np.add.at(nic, r_node[cross], vals)
-    return nic
+        inter = cluster.node_of(s_core) != cluster.node_of(r_core)
+        loads = hier.link_loads(s_core, r_core, demand[src, dst],
+                                n_cores=cluster.n_cores, active=inter)
+        for name, d in loads.items():
+            if name not in agg:
+                agg[name] = d
+            else:
+                agg[name] = {"tx": agg[name]["tx"] + d["tx"],
+                             "rx": agg[name]["rx"] + d["rx"],
+                             "bw": d["bw"]}
+    return agg
+
+
+def projected_nic_loads(graphs: Sequence[AppGraph], placement: Placement,
+                        cluster: ClusterTopology) -> np.ndarray:
+    """Per-link load (bytes/s, TX+RX) at the hierarchy's OUTERMOST level.
+
+    With the default hierarchies this reproduces the historical view:
+    paper mode — every inter-node byte at the per-node NIC; TPU mode —
+    pod-crossing bytes at the per-node DCN NIC.
+    """
+    hier = cluster.net_hierarchy()
+    top = hier.levels[-1].name
+    loads = projected_level_loads(graphs, placement, cluster)
+    if top not in loads:
+        units = -(-cluster.n_cores // hier.attach[-1])
+        return np.zeros(units)
+    return loads[top]["tx"] + loads[top]["rx"]
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +160,8 @@ class FleetStats:
     n_remap_rejects: int
     migrated_bytes: float
     per_job: dict[int, dict]
+    level_p99_util: dict = dataclasses.field(default_factory=dict)
+    # ^ p99 per hierarchy level of per-link utilisation samples (§9)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -194,6 +215,7 @@ class FleetScheduler:
         self.decisions: list[RemapDecision] = []
         self._util_samples: list[float] = []      # sim peak-server utilisation
         self._nic_util_samples: list[np.ndarray] = []  # per-node NIC util
+        self._level_util_samples: dict[str, list[np.ndarray]] = {}
         self._remap_scheduled = False
 
     # -- low-level fleet mutations (immediate) -------------------------------
@@ -423,9 +445,16 @@ class FleetScheduler:
     def _sample_nic_util(self) -> None:
         if not self.live:
             return
-        loads = projected_nic_loads(self._live_graphs(), self.placement,
-                                    self.cluster)
-        self._nic_util_samples.append(loads / self.cluster.nic_bw)
+        levels = projected_level_loads(self._live_graphs(), self.placement,
+                                       self.cluster)
+        top = self.cluster.net_hierarchy().levels[-1].name
+        for name, d in levels.items():
+            util = np.maximum(d["tx"], d["rx"]) / d["bw"]
+            self._level_util_samples.setdefault(name, []).append(util)
+            if name == top:
+                # historical per-node NIC view: TX+RX over nic_bw
+                self._nic_util_samples.append(
+                    (d["tx"] + d["rx"]) / self.cluster.nic_bw)
 
     def check_invariants(self) -> None:
         """free cores == all cores - live cores; live placements intact."""
@@ -459,6 +488,9 @@ class FleetScheduler:
             nic_p99 = float(np.percentile(all_util, 99))
         else:
             nic_p99 = 0.0
+        level_p99 = {
+            name: float(np.percentile(np.concatenate(samples), 99))
+            for name, samples in self._level_util_samples.items()}
         return FleetStats(
             n_jobs=len(self.jobs),
             makespan=max((j.departure for j in finished), default=0.0),
@@ -478,4 +510,5 @@ class FleetScheduler:
                 "msg_wait": j.msg_wait,
                 "n_migrations": j.n_migrations,
             } for j in self.jobs.values()},
+            level_p99_util=level_p99,
         )

@@ -18,7 +18,9 @@ from typing import Callable
 import numpy as np
 
 from ..core.graphs import AppGraph, ClusterTopology
-from ..core.workloads import Arrival, poisson_trace, table_poisson_trace, npb_poisson_trace
+from ..core.hierarchy import NetLevel, NetworkHierarchy
+from ..core.workloads import (Arrival, poisson_trace, rack_oversub_mix,
+                              table_poisson_trace, npb_poisson_trace)
 
 MB = 1 << 20
 
@@ -57,6 +59,42 @@ def npb_trace(rate: float = 0.25, n_arrivals: int = 12,
         cluster=_paper_cluster(),
         arrivals=npb_poisson_trace(rate=rate, n_arrivals=n_arrivals,
                                    seed=seed),
+        count_scale=0.02,
+        state_bytes_per_proc=64 * MB,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rack-oversubscription trace — deep hierarchy, scarce uplinks (§9)
+# ---------------------------------------------------------------------------
+def rack_oversub_cluster(oversub: float = 4.0,
+                         node_bw: float = 1e9) -> ClusterTopology:
+    """32 nodes × 8 cores in 8 racks of 4 nodes, 2 pods of 4 racks.
+
+    Every node has a ``node_bw`` uplink into its rack switch; the rack's
+    shared uplink carries ``fan_in × node_bw / oversub`` — ``oversub`` is
+    the classic fat-tree oversubscription ratio (1.0 = full bisection).
+    The pod spine keeps the rack tier's aggregate (no extra taper), so
+    the rack uplink is the scarce resource the mappers fight over.
+    """
+    rack_bw = 4 * node_bw / oversub
+    hier = NetworkHierarchy([
+        NetLevel("node", fan_in=8, bw=node_bw, latency=100e-9),
+        NetLevel("rack", fan_in=4, bw=rack_bw, latency=300e-9),
+        NetLevel("pod", fan_in=4, bw=rack_bw, latency=1e-6),
+    ])
+    return ClusterTopology(n_nodes=32, sockets_per_node=2,
+                           cores_per_socket=4, nic_bw=node_bw,
+                           hierarchy=hier)
+
+
+def rack_oversub_trace(rate: float = 0.5, n_arrivals: int = 16,
+                       seed: int = 0, oversub: float = 4.0) -> TraceSpec:
+    return TraceSpec(
+        name="rack_oversub",
+        cluster=rack_oversub_cluster(oversub=oversub),
+        arrivals=poisson_trace(rack_oversub_mix(), rate, n_arrivals,
+                               seed=seed),
         count_scale=0.02,
         state_bytes_per_proc=64 * MB,
     )
@@ -109,6 +147,7 @@ TRACES: dict[str, Callable[..., TraceSpec]] = {
     "table5_poisson": lambda **kw: table_trace(5, **kw),
     "npb_poisson": lambda **kw: npb_trace(**kw),
     "serve_fleet": lambda **kw: serve_fleet_trace(**kw),
+    "rack_oversub": lambda **kw: rack_oversub_trace(**kw),
 }
 
 

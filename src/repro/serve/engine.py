@@ -106,7 +106,11 @@ class ServeEngine:
             return 0
         self.ticks += 1
         toks = jnp.asarray(self.cur_tok)[:, None]
-        pos = jnp.asarray(self.pos + 1)
+        # self.pos[s] is the NEXT write position (prefill wrote the prompt
+        # at 0..pos-1 and left the sampled token pending) — decode the
+        # pending token AT pos, not past it, or the cache row at pos stays
+        # a zero hole that attention keeps reading
+        pos = jnp.asarray(self.pos)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         logits = np.asarray(logits)
         for s in active:

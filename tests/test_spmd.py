@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+from jax_compat import cost_analysis_is_dict, shard_map_supports_vma
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -22,6 +24,10 @@ def _run(code: str, devices: int = 8) -> str:
 
 def test_moe_shard_map_matches_pure_path():
     """Manual-EP shard_map MoE == single-device pure path, bit-for-bit-ish."""
+    if not shard_map_supports_vma():
+        pytest.skip("installed jax lacks shard_map(..., check_vma=) used by "
+                    "the manual-EP path (needs jax >= 0.6); env-dependent, "
+                    "not a code defect")
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh
@@ -112,6 +118,10 @@ print('SPMD train step OK')
 def test_mini_dryrun_lowers_and_compiles():
     """A miniature production mesh (2x2x2 pod/data/model) lowers+compiles
     train, prefill and decode for a smoke arch — the multi-pod pattern."""
+    if not cost_analysis_is_dict():
+        pytest.skip("installed jax returns a list from "
+                    "Compiled.cost_analysis() (dict API needs newer jax); "
+                    "env-dependent, not a code defect")
     _run("""
 import jax, numpy as np
 from repro.configs import get_smoke_config, SHAPES, ShapeSpec

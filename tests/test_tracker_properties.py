@@ -1,0 +1,120 @@
+"""Property tests: FreeCoreTracker conservation under arbitrary
+interleavings of take / release / snapshot / restore.
+
+Drives random operation sequences against a reference model (a plain
+set of used core ids) and checks after EVERY operation that
+- core count is conserved: total_free + |used| == n_cores,
+- no core is ever double-allocated (take returns a free core, take_cores
+  of an in-use core raises),
+- releasing a free core raises (double-release is an accounting bug),
+- restore() returns the tracker exactly to the snapshotted state.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned image lacks hypothesis — deterministic fallback
+    from repro.testing import given, settings, strategies as st
+
+from repro.core import ClusterTopology, FreeCoreTracker
+
+
+def _check_conservation(tracker: FreeCoreTracker, model: set) -> None:
+    n = tracker.cluster.n_cores
+    assert tracker.total_free() + len(model) == n
+    assert set(np.flatnonzero(tracker.used).tolist()) == model
+    assert tracker.free_per_node().sum() == tracker.total_free()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 100_000), st.integers(20, 120))
+def test_tracker_interleavings_conserve_cores(seed, n_ops):
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=int(rng.integers(2, 6)),
+                              sockets_per_node=int(rng.integers(1, 4)),
+                              cores_per_socket=int(rng.integers(1, 5)))
+    tracker = FreeCoreTracker(cluster)
+    model: set[int] = set()
+    snaps: list[tuple[np.ndarray, set]] = []
+
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 5))
+        if op == 0:                                   # take_core in a node
+            node = int(rng.integers(0, cluster.n_nodes))
+            if tracker.free_in_node(node) == 0:
+                with pytest.raises(RuntimeError):
+                    tracker.take_core(node)
+            else:
+                core = tracker.take_core(node)
+                assert core not in model, "double-allocated core"
+                assert cluster.node_of(core) == node
+                model.add(core)
+        elif op == 1:                                 # take specific cores
+            k = int(rng.integers(1, 5))
+            cores = rng.choice(cluster.n_cores, size=k, replace=False)
+            if any(int(c) in model for c in cores):
+                with pytest.raises(ValueError):
+                    tracker.take_cores(cores)
+            else:
+                tracker.take_cores(cores)
+                model.update(int(c) for c in cores)
+        elif op == 2:                                 # release owned cores
+            if model and rng.random() < 0.8:
+                k = int(rng.integers(1, min(len(model), 6) + 1))
+                cores = rng.choice(sorted(model), size=k, replace=False)
+                tracker.release_cores(cores)
+                model.difference_update(int(c) for c in cores)
+            else:                                     # release a free core
+                free = np.flatnonzero(~tracker.used)
+                if free.size:
+                    with pytest.raises(ValueError):
+                        tracker.release_cores(free[:1])
+        elif op == 3:                                 # snapshot
+            snaps.append((tracker.snapshot(), set(model)))
+        elif op == 4 and snaps:                       # restore a snapshot
+            snap, snap_model = snaps[int(rng.integers(0, len(snaps)))]
+            tracker.restore(snap)
+            model = set(snap_model)
+        _check_conservation(tracker, model)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100_000))
+def test_snapshot_isolated_from_later_mutation(seed):
+    """A snapshot is a copy: mutating the tracker (or restoring twice)
+    never corrupts it."""
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=3)
+    tracker = FreeCoreTracker(cluster)
+    first = rng.choice(cluster.n_cores, size=8, replace=False)
+    tracker.take_cores(first)
+    snap = tracker.snapshot()
+    want = snap.copy()
+    free = np.flatnonzero(~tracker.used)
+    tracker.take_cores(free[:4])
+    tracker.release_cores(first[:2])
+    tracker.restore(snap)
+    np.testing.assert_array_equal(tracker.used, want)
+    np.testing.assert_array_equal(snap, want)          # snapshot untouched
+    tracker.take_cores(np.flatnonzero(~tracker.used)[:1])
+    tracker.restore(snap)
+    np.testing.assert_array_equal(tracker.used, want)  # restore is repeatable
+
+
+def test_restore_rejects_shape_mismatch():
+    tracker = FreeCoreTracker(ClusterTopology(n_nodes=2))
+    with pytest.raises(ValueError):
+        tracker.restore(np.zeros(3, dtype=bool))
+
+
+def test_take_core_prefers_requested_socket_then_spills():
+    cluster = ClusterTopology(n_nodes=1, sockets_per_node=2,
+                              cores_per_socket=2)
+    tracker = FreeCoreTracker(cluster)
+    got = [tracker.take_core(0, socket=0) for _ in range(2)]
+    assert got == [0, 1]                       # fills socket 0 first
+    assert tracker.take_core(0, socket=0) in (2, 3)   # spills to socket 1
+    tracker.take_core(0)
+    with pytest.raises(RuntimeError):
+        tracker.take_core(0)
