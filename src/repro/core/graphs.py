@@ -104,6 +104,21 @@ class FlatMessages:
     def n_pairs(self) -> int:
         return int(self.pair_src.size)
 
+    @property
+    def time_order(self) -> np.ndarray:
+        """Stable sorted-by-emit order of this block, computed once.
+
+        The delta-aware live-set assembly (``sim_scan._WorkloadFlat``)
+        merges per-job sorted blocks instead of re-sorting the whole
+        workload, so the per-block order is worth caching alongside the
+        messages themselves.
+        """
+        order = getattr(self, "_time_order", None)
+        if order is None:
+            order = np.argsort(self.emit, kind="stable").astype(np.int32)
+            object.__setattr__(self, "_time_order", order)
+        return order
+
     # per-message views (derived; prefer the pair arrays in hot paths)
     @property
     def src(self) -> np.ndarray:

@@ -63,18 +63,29 @@ class _WorkloadFlat:
     Pair-granular fields (``pair_*``) drive routing — there are orders of
     magnitude fewer communicating pairs than messages; ``pair_of`` expands
     pair-level results to messages with one gather.
+
+    Two construction paths: the full build below, and the delta paths
+    :meth:`with_job_added` / :meth:`with_job_removed` used by the
+    scheduler's warm-start handle (``simulator.SimHandle``) — on a live
+    fleet the job set changes by one job per event, so the concatenated
+    arrays and the sorted time order are patched in O(M) (a block splice
+    plus a sorted merge) instead of rebuilt with a fresh O(M log M)
+    argsort.
     """
 
     def __init__(self, jobs: Sequence[AppGraph], count_scale: float):
         self.jobs = list(jobs)            # strong refs keep id() keys valid
+        self.count_scale = count_scale
         job_rows, pair_ofs, emits = [], [], []
         p_src, p_dst, p_size = [], [], []
+        msgs, pairs, procs = [], [], []
         proc_off = 0
         pair_off = 0
-        self.offsets = {}
         for k, job in enumerate(jobs):
             fm = job.flat_messages(count_scale)
-            self.offsets[job.job_id] = proc_off
+            msgs.append(fm.n_messages)
+            pairs.append(fm.n_pairs)
+            procs.append(job.n_procs)
             if fm.n_messages:
                 job_rows.append(np.full(fm.n_messages, k, dtype=np.int32))
                 pair_ofs.append(fm.pair_of.astype(np.int64) + pair_off)
@@ -84,7 +95,7 @@ class _WorkloadFlat:
                 p_size.append(fm.pair_size)
             proc_off += job.n_procs
             pair_off += fm.n_pairs
-        self.n_procs = proc_off
+        self._set_blocks(msgs, pairs, procs)
         if emits:
             self.job_row = np.concatenate(job_rows)
             self.pair_of = np.concatenate(pair_ofs).astype(np.int32)
@@ -97,18 +108,132 @@ class _WorkloadFlat:
             # cached pre-permuted views keep per-call gathers narrow
             self.time_order = np.argsort(self.emit,
                                          kind="stable").astype(np.int32)
-            self.emit_t = self.emit[self.time_order]
-            self.pair_of_t = self.pair_of[self.time_order]
-            # per-job message blocks for _metrics (job_row non-decreasing)
-            counts = np.bincount(self.job_row, minlength=len(self.jobs))
-            self.job_starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-            self.job_nonempty = counts > 0
         else:
+            # same field shape as the populated case so the delta paths
+            # (and their differential tests) work from an empty flat too
+            self.job_row = np.empty(0, dtype=np.int32)
+            self.pair_of = np.empty(0, dtype=np.int32)
             self.emit = np.empty(0)
+            self.pair_src = np.empty(0, dtype=np.int64)
+            self.pair_dst = np.empty(0, dtype=np.int64)
+            self.pair_size = np.empty(0)
+            self.time_order = np.empty(0, dtype=np.int32)
+        self._set_time_views()
+
+    # -- shared finalisation ------------------------------------------------
+    def _set_blocks(self, msgs, pairs, procs) -> None:
+        """Per-job block sizes (messages / pairs / procs) + derived offsets."""
+        self.job_msgs = np.asarray(msgs, dtype=np.int64)
+        self.job_pairs = np.asarray(pairs, dtype=np.int64)
+        self.job_procs = np.asarray(procs, dtype=np.int64)
+        self.job_starts = np.concatenate(
+            [[0], np.cumsum(self.job_msgs)[:-1]]).astype(np.int64)
+        self.job_nonempty = self.job_msgs > 0
+        self.offsets = {}
+        off = 0
+        for job, p in zip(self.jobs, self.job_procs):
+            self.offsets[job.job_id] = off
+            off += int(p)
+        self.n_procs = off
+
+    def _set_time_views(self) -> None:
+        self.emit_t = self.emit[self.time_order]
+        self.pair_of_t = self.pair_of[self.time_order]
 
     @property
     def n_messages(self) -> int:
         return int(self.emit.size)
+
+    # -- delta construction (the scheduler's churn pattern) ------------------
+    def with_job_added(self, job: AppGraph) -> "_WorkloadFlat":
+        """New flat with ``job`` appended, reusing this flat's arrays.
+
+        The job's cached block (``AppGraph.flat_messages``) is spliced on
+        and its cached sorted order merged into ``time_order`` with one
+        ``searchsorted`` — equal emit times keep stable-argsort semantics
+        (old messages first, block order within the new job).
+        """
+        fm = job.flat_messages(self.count_scale)
+        new = object.__new__(_WorkloadFlat)
+        new.jobs = self.jobs + [job]
+        new.count_scale = self.count_scale
+        k = len(self.jobs)
+        pair_off = int(self.pair_size.size)
+        proc_off = self.n_procs
+        if fm.n_messages:
+            new.job_row = np.concatenate(
+                [self.job_row, np.full(fm.n_messages, k, dtype=np.int32)])
+            new.pair_of = np.concatenate(
+                [self.pair_of,
+                 (fm.pair_of.astype(np.int64) + pair_off).astype(np.int32)])
+            new.emit = np.concatenate([self.emit, fm.emit])
+            new.pair_src = np.concatenate(
+                [self.pair_src, fm.pair_src.astype(np.int64) + proc_off])
+            new.pair_dst = np.concatenate(
+                [self.pair_dst, fm.pair_dst.astype(np.int64) + proc_off])
+            new.pair_size = np.concatenate([self.pair_size, fm.pair_size])
+            blk = fm.time_order
+            blk_emit = fm.emit[blk]
+            # merge two sorted runs; 'right' keeps ties stable (old first)
+            at = np.searchsorted(self.emit_t, blk_emit, side="right")
+            pos = at + np.arange(blk.size)
+            order = np.empty(self.n_messages + blk.size, dtype=np.int32)
+            mask = np.ones(order.size, dtype=bool)
+            mask[pos] = False
+            order[mask] = self.time_order
+            order[pos] = blk + np.int32(self.n_messages)
+            new.time_order = order
+        else:
+            new.job_row = self.job_row
+            new.pair_of = self.pair_of
+            new.emit = self.emit
+            new.pair_src = self.pair_src
+            new.pair_dst = self.pair_dst
+            new.pair_size = self.pair_size
+            new.time_order = self.time_order
+        new._set_blocks(np.append(self.job_msgs, fm.n_messages),
+                        np.append(self.job_pairs, fm.n_pairs),
+                        np.append(self.job_procs, job.n_procs))
+        new._set_time_views()
+        return new
+
+    def with_job_removed(self, job_id: int) -> "_WorkloadFlat":
+        """New flat with ``job_id``'s block spliced out, arrays reused.
+
+        Message/pair/proc indices of later jobs shift down by the removed
+        block's sizes; ``time_order`` drops the block's entries and
+        renumbers the survivors — all O(M) vector ops, no re-sort.
+        """
+        k = next(i for i, j in enumerate(self.jobs) if j.job_id == job_id)
+        m0 = int(self.job_starts[k])
+        m1 = m0 + int(self.job_msgs[k])
+        p0 = int(self.job_pairs[:k].sum())
+        p1 = p0 + int(self.job_pairs[k])
+        nm, npair, nproc = m1 - m0, p1 - p0, int(self.job_procs[k])
+        new = object.__new__(_WorkloadFlat)
+        new.jobs = self.jobs[:k] + self.jobs[k + 1:]
+        new.count_scale = self.count_scale
+        new.job_row = np.concatenate(
+            [self.job_row[:m0], self.job_row[m1:] - np.int32(1)])
+        new.pair_of = np.concatenate(
+            [self.pair_of[:m0], self.pair_of[m1:] - np.int32(npair)])
+        new.emit = np.concatenate([self.emit[:m0], self.emit[m1:]])
+        new.pair_src = np.concatenate(
+            [self.pair_src[:p0], self.pair_src[p1:] - nproc])
+        new.pair_dst = np.concatenate(
+            [self.pair_dst[:p0], self.pair_dst[p1:] - nproc])
+        new.pair_size = np.concatenate(
+            [self.pair_size[:p0], self.pair_size[p1:]])
+        keep = self.time_order < m0
+        keep |= self.time_order >= m1
+        order = self.time_order[keep].copy()
+        order[order >= m1] -= np.int32(nm)
+        new.time_order = order
+        new._set_blocks(np.delete(self.job_msgs, k),
+                        np.delete(self.job_pairs, k),
+                        np.delete(self.job_procs, k))
+        new._set_time_views()
+        return new
 
     def core_table(self, placement: Placement) -> np.ndarray:
         """Per-(job, rank) global core id, aligned with pair_src/pair_dst."""
@@ -123,14 +248,64 @@ _FLAT_CACHE: OrderedDict[tuple, _WorkloadFlat] = OrderedDict()
 _FLAT_CACHE_SIZE = 8
 
 
+def _delta_steps(prev: _WorkloadFlat, jobs: Sequence[AppGraph]):
+    """(removed job_ids, appended jobs) turning ``prev`` into ``jobs``.
+
+    The scheduler's churn pattern only: survivors keep their relative
+    order and new jobs are appended at the tail. Returns ``None`` when
+    ``jobs`` is not reachable that way (or the rebuild would be as
+    expensive as starting fresh).
+    """
+    cur_ids = [id(j) for j in jobs]
+    cur_set = set(cur_ids)
+    prev_set = {id(j) for j in prev.jobs}
+    survivors = [id(j) for j in prev.jobs if id(j) in cur_set]
+    added = [j for j in jobs if id(j) not in prev_set]
+    if survivors + [id(j) for j in added] != cur_ids:
+        return None
+    removed = [j.job_id for j in prev.jobs if id(j) not in cur_set]
+    if len(removed) + len(added) > max(2, len(jobs) // 2):
+        return None
+    return removed, added
+
+
+def flatten_delta(jobs: Sequence[AppGraph], count_scale: float,
+                  prev: _WorkloadFlat | None = None) -> _WorkloadFlat:
+    """Warm-start flatten: patch ``prev`` instead of rebuilding when the
+    job set changed by a few departures and/or appended arrivals — the
+    online scheduler's per-event churn (DESIGN.md §3).
+    """
+    jobs = list(jobs)
+    if prev is not None and count_scale == prev.count_scale:
+        if [id(j) for j in jobs] == [id(j) for j in prev.jobs]:
+            return prev
+        steps = _delta_steps(prev, jobs)
+        if steps is not None:
+            removed, added = steps
+            flat = prev
+            for jid in removed:
+                flat = flat.with_job_removed(jid)
+            for job in added:
+                flat = flat.with_job_added(job)
+            _cache_put(flat)
+            return flat
+    return _flatten(jobs, count_scale)
+
+
+def _cache_put(flat: _WorkloadFlat) -> None:
+    key = (tuple(id(j) for j in flat.jobs), flat.count_scale)
+    _FLAT_CACHE[key] = flat
+    _FLAT_CACHE.move_to_end(key)
+    while len(_FLAT_CACHE) > _FLAT_CACHE_SIZE:
+        _FLAT_CACHE.popitem(last=False)
+
+
 def _flatten(jobs: Sequence[AppGraph], count_scale: float) -> _WorkloadFlat:
     key = (tuple(id(j) for j in jobs), count_scale)
     flat = _FLAT_CACHE.get(key)
     if flat is None:
         flat = _WorkloadFlat(jobs, count_scale)
-        _FLAT_CACHE[key] = flat
-        while len(_FLAT_CACHE) > _FLAT_CACHE_SIZE:
-            _FLAT_CACHE.popitem(last=False)
+        _cache_put(flat)
     else:
         _FLAT_CACHE.move_to_end(key)
     return flat
@@ -453,6 +628,13 @@ def _pass_waits(arr_s, srv_s, starts, backend: str) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # Whole-workload simulation
 # ---------------------------------------------------------------------------
+def _empty_result(jobs) -> SimResult:
+    """Message-free workload: still key every job (zero-traffic jobs must
+    not vanish from per-job metrics — the scheduler indexes them)."""
+    zeros = {job.job_id: 0.0 for job in jobs}
+    return SimResult(0.0, dict(zeros), 0.0, dict(zeros), 0.0, 0, 0.0)
+
+
 def _metrics(jobs, flat: _WorkloadFlat, wait, deliver, util) -> SimResult:
     nj = len(jobs)
     # job_row is non-decreasing (jobs flattened in order), so per-job sums
@@ -479,13 +661,19 @@ def _metrics(jobs, flat: _WorkloadFlat, wait, deliver, util) -> SimResult:
 def simulate_scan(jobs: Sequence[AppGraph], placement: Placement,
                   cluster: ClusterTopology | None = None,
                   count_scale: float = 1.0,
-                  backend: str = "segmented") -> SimResult:
-    """Scan-backend equivalent of ``simulator.simulate`` (same metrics)."""
+                  backend: str = "segmented",
+                  flat: _WorkloadFlat | None = None) -> SimResult:
+    """Scan-backend equivalent of ``simulator.simulate`` (same metrics).
+
+    ``flat`` lets a warm-start handle (``simulator.SimHandle``) pass a
+    delta-assembled workload instead of going through the global cache.
+    """
     cluster = cluster or placement.cluster
     placement.validate()
-    flat = _flatten(jobs, count_scale)
+    if flat is None:
+        flat = _flatten(jobs, count_scale)
     if flat.n_messages == 0:
-        return SimResult(0.0, {}, 0.0, {}, 0.0, 0, 0.0)
+        return _empty_result(jobs)
     sid1_p, service_p, stages = _route_pairs(cluster, flat, placement)
 
     # ---- stage 0: every message at its first server ----------------------
@@ -542,7 +730,8 @@ def simulate_scan_batch(jobs: Sequence[AppGraph],
                         placements: Sequence[Placement],
                         cluster: ClusterTopology | None = None,
                         count_scale: float = 1.0,
-                        backend: str = "jax") -> list[SimResult]:
+                        backend: str = "jax",
+                        flat: _WorkloadFlat | None = None) -> list[SimResult]:
     """Score K placements of one job set with one batched scan per stage.
 
     Placements share jobs and message count M, so stage-0 rows stack into
@@ -554,9 +743,10 @@ def simulate_scan_batch(jobs: Sequence[AppGraph],
     if not placements:
         return []
     cluster = cluster or placements[0].cluster
-    flat = _flatten(jobs, count_scale)
+    if flat is None:
+        flat = _flatten(jobs, count_scale)
     if flat.n_messages == 0:
-        return [SimResult(0.0, {}, 0.0, {}, 0.0, 0, 0.0) for _ in placements]
+        return [_empty_result(jobs) for _ in placements]
     for p in placements:
         p.validate()
 

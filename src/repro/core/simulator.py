@@ -199,6 +199,53 @@ def simulate_batch(jobs: Sequence[AppGraph], placements: Sequence[Placement],
             for p in placements]
 
 
+class SimHandle:
+    """Warm-start handle for repeated simulation over a churning live set.
+
+    The online scheduler re-simulates the live workload after EVERY fleet
+    mutation (admit / depart / remap commit — DESIGN.md §3); a cold
+    ``simulate()`` call re-concatenates and re-sorts the whole flattened
+    workload each time. The handle pins the previous ``_WorkloadFlat`` and
+    asks ``sim_scan.flatten_delta`` for a patched assembly — departed
+    jobs' message blocks spliced out, arrived jobs' cached blocks merged
+    into the sorted time order in O(M) — so each re-clock only pays for
+    routing and the scans themselves. Results are identical to cold calls
+    on every backend (the delta arrays are bit-equal to a full rebuild).
+    """
+
+    def __init__(self, cluster: ClusterTopology | None = None,
+                 count_scale: float = 1.0, backend: str = "auto"):
+        self.cluster = cluster
+        self.count_scale = count_scale
+        self.backend = resolve_backend(backend)
+        self._flat = None
+
+    def _warm_flat(self, jobs: Sequence[AppGraph]):
+        from . import sim_scan
+        self._flat = sim_scan.flatten_delta(jobs, self.count_scale,
+                                            prev=self._flat)
+        return self._flat
+
+    def simulate(self, jobs: Sequence[AppGraph],
+                 placement: Placement) -> SimResult:
+        if self.backend == "loop":
+            return _simulate_loop(jobs, placement, self.cluster,
+                                  self.count_scale)
+        from . import sim_scan
+        return sim_scan.simulate_scan(jobs, placement, self.cluster,
+                                      self.count_scale, backend=self.backend,
+                                      flat=self._warm_flat(jobs))
+
+    def simulate_batch(self, jobs: Sequence[AppGraph],
+                       placements: Sequence[Placement]) -> list[SimResult]:
+        if self.backend in ("jax", "pallas"):
+            from . import sim_scan
+            return sim_scan.simulate_scan_batch(
+                jobs, placements, self.cluster, self.count_scale,
+                backend=self.backend, flat=self._warm_flat(jobs))
+        return [self.simulate(jobs, p) for p in placements]
+
+
 def _simulate_loop(jobs: Sequence[AppGraph], placement: Placement,
                    cluster: ClusterTopology | None = None,
                    count_scale: float = 1.0) -> SimResult:
@@ -223,7 +270,8 @@ def _simulate_loop(jobs: Sequence[AppGraph], placement: Placement,
             receivers.append(np.full(n, cores[j], dtype=np.int32))
             sizes.append(np.full(n, job.L[i, j], dtype=np.float64))
     if not emits:
-        return SimResult(0.0, {}, 0.0, {}, 0.0, 0, 0.0)
+        from .sim_scan import _empty_result
+        return _empty_result(jobs)
     emit = np.concatenate(emits)
     job_id = np.concatenate(job_ids)
     s_core = np.concatenate(senders)

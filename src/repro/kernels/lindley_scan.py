@@ -65,6 +65,10 @@ def lindley_scan_rows(rows, *, chunk: int = 512,
     if not rows:
         return []
     n = max(u.shape[0] for u, _ in rows)
+    # pad the scan axis to a power of two (at least one chunk) so a churning
+    # live fleet — whose message count changes on every scheduler event —
+    # hits a bounded set of compiled shapes (mirrors sim_scan._waits_jax)
+    n = max(chunk, 1 << max(0, int(n - 1).bit_length()))
     ub = np.zeros((len(rows), n), np.float32)
     vb = np.full((len(rows), n), -np.inf, np.float32)
     for i, (u, v) in enumerate(rows):

@@ -26,6 +26,12 @@ class Event:
     time: float
     kind: str            # ARRIVAL | DEPARTURE | REMAP
     job_id: int = -1     # -1 for REMAP ticks
+    epoch: int = 0       # departure re-key generation (DESIGN.md §3)
+    # ^ every re-clock that moves a job's departure bumps the job's epoch
+    #   and pushes a fresh event; superseded events stay in the heap and
+    #   are discarded lazily when their epoch no longer matches the job's.
+    #   This replaces the old float-equality stale check, which broke as
+    #   soon as a departure was re-derived rather than copied bit-for-bit.
 
     def sort_key(self, seq: int) -> tuple:
         return (self.time, _KIND_PRIORITY[self.kind], seq)

@@ -1,0 +1,246 @@
+"""Re-clocking engine tests (DESIGN.md §3): the clock stays honest.
+
+Before the fix, departures were keyed exactly once at admission, so every
+later arrival, departure, and remap commit left live jobs running on
+stale finish times. ``FleetScheduler(reclock=False)`` preserves that
+behaviour as a measurable baseline; the regression tests here pin that
+the re-clocked scheduler diverges from it in the physically-correct
+direction and that epoch-keyed departure events never fire twice.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graphs import AppGraph, ClusterTopology, PATTERNS
+from repro.sched import DEPARTURE, REMAP, Event, FleetScheduler
+
+MB = 1 << 20
+
+# heavy enough to saturate the shared NIC servers — contention must move
+# simulated finish times or the re-clock has nothing to correct
+COUNT_SCALE = 0.2
+
+
+def _heavy(jid, count, procs=16):
+    return AppGraph.from_pattern(f"j{jid}", "all_to_all", procs, 1 * MB,
+                                 50.0, count, job_id=jid)
+
+
+def _run(jobs_at, reclock, strategy="cyclic", **kw):
+    cluster = ClusterTopology(n_nodes=2)
+    sched = FleetScheduler(cluster, strategy, count_scale=COUNT_SCALE,
+                           reclock=reclock, **kw)
+    for g, at in jobs_at:
+        sched.submit(g, at=at)
+    stats = sched.run()
+    sched.check_invariants()
+    return sched, stats
+
+
+# ---------------------------------------------------------------------------
+# Regression pins: the stale clock was blind to churn, the re-clock is not
+# ---------------------------------------------------------------------------
+def test_arrival_lengthens_surviving_departures():
+    """A later arrival adds contention -> survivors must finish later.
+
+    Fails before the fix: the survivor's departure was keyed at its own
+    admission (when it ran alone) and never revisited.
+    """
+    _, alone = _run([(_heavy(0, 400), 0.0)], reclock=True)
+    solo_dep = alone.per_job[0]["departure"]
+
+    trace = [(_heavy(0, 400), 0.0), (_heavy(1, 150), 1.0)]
+    _, stale = _run(trace, reclock=False)
+    _, fixed = _run(trace, reclock=True)
+
+    # the stale clock ignores job 1 entirely when clocking job 0
+    assert stale.per_job[0]["departure"] == pytest.approx(solo_dep)
+    # the honest clock pushes job 0 out while job 1 contends
+    assert fixed.per_job[0]["departure"] > solo_dep * 1.05
+
+
+def test_departure_shortens_surviving_departures():
+    """A departure removes contention -> survivors must finish sooner.
+
+    Fails before the fix: the survivor kept the finish time simulated
+    under full contention at its admission.
+    """
+    trace = [(_heavy(1, 60), 0.0), (_heavy(0, 400), 0.1)]
+    _, stale = _run(trace, reclock=False)
+    _, fixed = _run(trace, reclock=True)
+
+    _, alone = _run([(_heavy(0, 400), 0.0)], reclock=True)
+    solo_duration = alone.per_job[0]["departure"]
+
+    dep_stale = stale.per_job[0]["departure"]
+    dep_fixed = fixed.per_job[0]["departure"]
+    assert dep_fixed < dep_stale - 1e-6
+    # ... but job 0 DID share the cluster with job 1 for a while, so it
+    # must still be slower than an uncontended run
+    assert dep_fixed - fixed.per_job[0]["placed_at"] > solo_duration
+
+
+def test_stale_clock_makespan_error_is_corrected():
+    """Constructed contention trace: the stale makespan is provably wrong.
+
+    Job 0 is admitted alone, so the stale clock pins the makespan at job
+    0's uncontended finish; job 1's arrival makes that impossible — total
+    work grew, the shared servers are saturated, and the true last
+    departure moves out. The re-clocked scheduler reports it.
+    """
+    trace = [(_heavy(0, 400), 0.0), (_heavy(1, 150), 1.0)]
+    _, stale = _run(trace, reclock=False)
+    _, fixed = _run(trace, reclock=True)
+    _, alone = _run([(_heavy(0, 400), 0.0)], reclock=True)
+
+    assert stale.makespan == pytest.approx(alone.makespan)   # the bug
+    assert fixed.makespan > stale.makespan * 1.05            # the fix
+
+
+def test_no_churn_keeps_clocks_identical():
+    """With a single job the elapsed-work model telescopes: re-clocking
+    must reproduce the admission-time departure bit-for-bit."""
+    trace = [(_heavy(0, 200), 0.0)]
+    _, stale = _run(trace, reclock=False)
+    _, fixed = _run(trace, reclock=True)
+    assert fixed.makespan == stale.makespan
+    assert fixed.per_job[0]["departure"] == stale.per_job[0]["departure"]
+
+
+# ---------------------------------------------------------------------------
+# Epoch-keyed events
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("reclock", [False, True])
+def test_zero_traffic_job_survives_the_clock(reclock):
+    """A job whose graph emits no messages must still be keyed by every
+    simulate (empty workloads key all jobs at 0.0) — the re-clock indexes
+    `job_finish` for EVERY live job on every mutation."""
+    n = 8
+    silent = AppGraph(name="silent", L=np.zeros((n, n)),
+                      lam=np.zeros((n, n)),
+                      cnt=np.zeros((n, n), dtype=np.int64), job_id=0)
+    cluster = ClusterTopology(n_nodes=2)
+    sched = FleetScheduler(cluster, "cyclic", count_scale=COUNT_SCALE,
+                           reclock=reclock)
+    sched.submit(silent, at=0.0)
+    sched.submit(_heavy(1, 60), at=0.5)
+    sched.run()
+    sched.check_invariants()
+    assert not sched.live and set(sched.done) == {0, 1}
+
+
+def test_stale_epoch_departure_event_is_ignored():
+    cluster = ClusterTopology(n_nodes=2)
+    sched = FleetScheduler(cluster, "cyclic", count_scale=COUNT_SCALE)
+    sched.submit(_heavy(0, 200), at=0.0)
+    assert sched.step().kind == "arrival"
+    job = sched.jobs[0]
+    assert 0 in sched.live and job.departure is not None
+
+    # forge a departure with a superseded epoch at an earlier time: the
+    # old float check would have departed iff times matched; the epoch
+    # check must ignore it regardless
+    sched.events.push(Event(time=sched.now, kind=DEPARTURE, job_id=0,
+                            epoch=job.epoch - 1))
+    sched.step()
+    assert 0 in sched.live, "stale-epoch event must not depart the job"
+
+    sched.run()
+    sched.check_invariants()
+    assert 0 in sched.done and not sched.live
+
+
+def test_random_traces_never_double_depart_and_invariants_hold():
+    """Property: over random traces (queueing, remaps, cheap migrations),
+    every job departs exactly once and the fleet accounting invariant
+    holds after every single event."""
+
+    class CountingScheduler(FleetScheduler):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.depart_calls = []
+
+        def depart(self, job_id, now=None):
+            self.depart_calls.append(job_id)
+            return super().depart(job_id, now)
+
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        cluster = ClusterTopology(n_nodes=2)
+        sched = CountingScheduler(
+            cluster, "cyclic", count_scale=0.1, remap_interval=1.0,
+            util_threshold=0.5, state_bytes_per_proc=1 * MB)
+        t = 0.0
+        n_jobs = 10
+        for jid in range(n_jobs):
+            pattern = PATTERNS[int(rng.integers(0, len(PATTERNS)))]
+            g = AppGraph.from_pattern(
+                f"j{jid}", pattern, int(rng.integers(4, 25)), 1 * MB, 50.0,
+                int(rng.integers(20, 120)), job_id=jid)
+            sched.submit(g, at=t)
+            t += float(rng.exponential(0.5))
+        while sched.step() is not None:
+            sched.check_invariants()
+        assert sorted(sched.depart_calls) == list(range(n_jobs))
+        assert len(sched.done) == n_jobs and not sched.live
+        assert sched.tracker.total_free() == cluster.n_cores
+        for rec in sched.stats().per_job.values():
+            assert rec["departure"] >= rec["placed_at"] >= rec["arrival"]
+
+
+# ---------------------------------------------------------------------------
+# Satellites: drain remap tick + commit utilisation sample
+# ---------------------------------------------------------------------------
+def test_fifo_drain_placement_schedules_remap_tick():
+    """A queue drain changes contention like an arrival does — it must
+    keep the periodic remap tick alive (it previously lapsed here)."""
+    cluster = ClusterTopology(n_nodes=2)
+    sched = FleetScheduler(cluster, "cyclic", count_scale=COUNT_SCALE,
+                           remap_interval=None)
+    sched.submit(_heavy(0, 120, procs=24), at=0.0)
+    sched.submit(_heavy(1, 120, procs=24), at=0.1)
+    sched.step()                       # place job 0 (no tick: interval None)
+    sched.step()                       # job 1 queues behind it
+    assert sched.pending == [1]
+    assert sched.events.count(REMAP) == 0
+
+    # enable remapping only now, so the ONLY path that can schedule the
+    # tick is the drain placement on job 0's departure
+    sched.remap_interval = 5.0
+    while sched.pending:
+        assert sched.step() is not None
+    assert 1 in sched.live
+    assert sched.events.count(REMAP) == 1
+    sched.run()
+    sched.check_invariants()
+
+
+@pytest.mark.parametrize("reclock", [False, True])
+def test_remap_commit_samples_post_remap_utilisation(reclock):
+    """Every committed remap must append the post-remap peak server
+    utilisation so ``FleetStats.peak_sim_util`` sees the new placement."""
+
+    class Probe(FleetScheduler):
+        commits_probed = 0
+
+        def _remap_pass(self):
+            before = len(self._util_samples)
+            n_dec = len(self.decisions)
+            super()._remap_pass()
+            if len(self.decisions) > n_dec and self.decisions[-1].committed:
+                # the committed candidate's post-remap state must have
+                # been sampled (the pre-pass result may be a cached
+                # re-clock reuse that was sampled when fresh)
+                assert len(self._util_samples) >= before + 1
+                Probe.commits_probed += 1
+
+    from repro.sched import get_trace
+    Probe.commits_probed = 0
+    spec = get_trace("table4_poisson", n_arrivals=12, seed=0)
+    sched = Probe(spec.cluster, "new", remap_interval=5.0,
+                  state_bytes_per_proc=64 * MB,
+                  count_scale=spec.count_scale, reclock=reclock)
+    sched.submit_trace(spec.arrivals)
+    stats = sched.run()
+    sched.check_invariants()
+    assert stats.n_remap_commits >= 1, "scenario no longer commits remaps"
+    assert Probe.commits_probed == stats.n_remap_commits

@@ -176,6 +176,22 @@ def test_remap_respects_migration_budget():
 
 
 # ---------------------------------------------------------------------------
+# Strategy resolution
+# ---------------------------------------------------------------------------
+def test_resolve_strategy_error_lists_full_registry():
+    """The KeyError must enumerate the lazily-imported TPU registry too,
+    not a hardcoded ['new_tpu'] that rots as strategies are added."""
+    from repro.core.meshplan import TPU_STRATEGIES
+    from repro.sched import resolve_strategy
+
+    with pytest.raises(KeyError) as excinfo:
+        resolve_strategy("omnet_magic")
+    msg = str(excinfo.value)
+    for name in set(STRATEGIES) | set(TPU_STRATEGIES):
+        assert f"'{name}'" in msg
+
+
+# ---------------------------------------------------------------------------
 # Traces
 # ---------------------------------------------------------------------------
 def test_poisson_trace_deterministic_and_well_formed():

@@ -434,3 +434,98 @@ def test_empty_workload_all_backends():
     for be in ("loop", "segmented", "jax"):
         res = simulate([], Placement(cluster), cluster, backend=be)
         assert res.total_wait == 0.0 and res.n_messages == 0
+
+
+# ---------------------------------------------------------------------------
+# Delta-aware workload assembly (the scheduler's warm-start path)
+# ---------------------------------------------------------------------------
+_FLAT_FIELDS = ("emit", "pair_of", "job_row", "pair_src", "pair_dst",
+                "pair_size", "time_order", "emit_t", "pair_of_t",
+                "job_starts", "job_msgs", "job_pairs", "job_procs")
+
+
+def _assert_flat_equal(flat, jobs, count_scale):
+    """Delta-assembled flat must be BIT-equal to a cold full rebuild."""
+    from repro.core.sim_scan import _WorkloadFlat
+    ref = _WorkloadFlat(jobs, count_scale)
+    for f in _FLAT_FIELDS:
+        assert np.array_equal(getattr(flat, f), getattr(ref, f)), f
+    assert flat.offsets == ref.offsets and flat.n_procs == ref.n_procs
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delta_flat_matches_full_rebuild(seed):
+    """Random add/remove churn through the delta constructors stays
+    bit-identical to rebuilding the concatenated workload from scratch
+    (including the stable arrival-time sort order)."""
+    from repro.core.sim_scan import _WorkloadFlat, flatten_delta
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=6)
+    jobs, _ = _random_workload(rng, cluster, 6)
+    if len(jobs) < 3:
+        return
+    cs = float(rng.choice([0.5, 1.0]))
+    flat = _WorkloadFlat(jobs, cs)
+    live = list(jobs)
+    next_id = 100
+    for _ in range(6):
+        if live and rng.random() < 0.5:
+            victim = live.pop(int(rng.integers(0, len(live))))
+            flat = flat.with_job_removed(victim.job_id)
+        else:
+            pattern = PATTERNS[int(rng.integers(0, len(PATTERNS)))]
+            job = AppGraph.from_pattern(f"d{next_id}", pattern,
+                                        int(rng.integers(2, 7)), 64 * KB,
+                                        50.0, int(rng.integers(1, 25)),
+                                        job_id=next_id)
+            next_id += 1
+            live.append(job)
+            flat = flat.with_job_added(job)
+        _assert_flat_equal(flat, live, cs)
+    # flatten_delta applies the same steps from a cached predecessor
+    if len(live) >= 2:
+        churned = live[1:] + [AppGraph.from_pattern(
+            "tail", PATTERNS[0], 4, 64 * KB, 50.0, 10, job_id=next_id)]
+        flat2 = flatten_delta(churned, cs, prev=flat)
+        _assert_flat_equal(flat2, churned, cs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sim_handle_matches_cold_simulate_under_churn(seed):
+    """SimHandle's warm re-simulation over a churning live set must agree
+    with the loop reference at every step (1e-9, the f64 contract)."""
+    from repro.core.simulator import SimHandle
+    rng = np.random.default_rng(seed)
+    cluster = ClusterTopology(n_nodes=4)
+    handle = SimHandle(cluster, count_scale=1.0, backend="segmented")
+    live, next_id = [], 0
+    for _ in range(10):
+        if live and rng.random() < 0.4:
+            live.pop(int(rng.integers(0, len(live))))
+        else:
+            pattern = PATTERNS[int(rng.integers(0, len(PATTERNS)))]
+            live.append(AppGraph.from_pattern(
+                f"h{next_id}", pattern, int(rng.integers(2, 7)), 64 * KB,
+                50.0, int(rng.integers(1, 25)), job_id=next_id))
+            next_id += 1
+        if not live:
+            continue
+        if sum(j.n_procs for j in live) > cluster.n_cores:
+            live.pop()
+            continue
+        placement = Placement(cluster)
+        off = 0
+        for job in live:
+            placement.assign(job.job_id, np.arange(off, off + job.n_procs))
+            off += job.n_procs
+        warm = handle.simulate(live, placement)
+        ref = simulate(live, placement, cluster, 1.0, backend="loop")
+        _assert_close(warm.total_wait, ref.total_wait, 1e-9, "total_wait")
+        _assert_close(warm.max_server_utilisation,
+                      ref.max_server_utilisation, 1e-6, "util")
+        assert warm.job_finish.keys() == ref.job_finish.keys()
+        for jid in ref.job_finish:
+            _assert_close(warm.job_finish[jid], ref.job_finish[jid], 1e-9,
+                          f"job_finish[{jid}]")
