@@ -1,0 +1,181 @@
+"""CI bench-regression gate: compare BENCH_*.json against committed baselines.
+
+The fast CI job runs the ``--quick`` benches (sim / hier / sched /
+search), then this script compares their headline numbers against
+``benchmarks/baselines.json`` and exits non-zero when a metric regresses
+beyond its tolerance.
+
+The baselines encode **--quick provenance**: the committed BENCH_*.json
+at the repo root are *full* runs (different trace sizes/budgets), so
+comparing against those reports spurious regressions by design.
+Regenerate the quick outputs first (as CI does)::
+
+    for b in sim hier sched search; do
+        PYTHONPATH=src python benchmarks/${b}_bench.py --quick \
+            --out /tmp/bench/BENCH_${b}.json
+    done   # (sim_bench also wants --skip-sched)
+    PYTHONPATH=src python benchmarks/check_regression.py --dir /tmp/bench
+
+Baseline file format::
+
+    {
+      "default_tolerance": 0.10,        # the one-line override knob
+      "metrics": {
+        "<metric name>": {
+          "file": "BENCH_sched.json",   # produced by the quick bench run
+          "path": "strategies.new.total_msg_wait",  # dots + [i] indexing
+          "value": 123.4,               # the committed baseline
+          "direction": "lower",         # lower|higher is better, or "equal"
+          "tolerance": 0.25,            # optional per-metric override
+          "abs_slack": 0.5              # optional absolute grace (noisy walls)
+        },
+        "<boolean metric>": {"file": ..., "path": ..., "expect": true}
+      }
+    }
+
+A "lower"-is-better metric regresses when
+``observed > value * (1 + tolerance) + abs_slack`` (mirrored for
+"higher"; "equal" fails outside the band both ways). Boolean metrics
+must equal ``expect`` exactly. Raising ``default_tolerance`` in the
+baseline file is the documented one-line loosen-everything knob;
+re-running the quick benches and committing the fresh numbers is the
+intended way to *move* a baseline.
+
+    PYTHONPATH=src python benchmarks/check_regression.py --dir /tmp/bench \
+        --update   # re-baseline from fresh quick outputs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+
+def lookup(doc, path: str):
+    """Resolve ``a.b[2].c``-style paths into a parsed JSON document."""
+    cur = doc
+    for part in path.split("."):
+        for token in re.findall(r"[^\[\]]+|\[\d+\]", part):
+            if token.startswith("["):
+                cur = cur[int(token[1:-1])]
+            else:
+                cur = cur[token]
+    return cur
+
+
+def check_metric(name: str, spec: dict, observed, default_tol: float) -> str | None:
+    """Returns a failure message, or ``None`` when the metric is healthy."""
+    if "expect" in spec:
+        if observed != spec["expect"]:
+            return f"{name}: expected {spec['expect']!r}, observed {observed!r}"
+        return None
+    value = float(spec["value"])
+    tol = float(spec.get("tolerance", default_tol))
+    slack = float(spec.get("abs_slack", 0.0))
+    direction = spec.get("direction", "lower")
+    observed = float(observed)
+    if direction == "lower":
+        bound = value * (1.0 + tol) + slack
+        if observed > bound:
+            return (
+                f"{name}: {observed:.6g} exceeds baseline {value:.6g} "
+                f"(+{tol:.0%} limit {bound:.6g})"
+            )
+    elif direction == "higher":
+        bound = value * (1.0 - tol) - slack
+        if observed < bound:
+            return (
+                f"{name}: {observed:.6g} fell below baseline {value:.6g} "
+                f"(-{tol:.0%} limit {bound:.6g})"
+            )
+    elif direction == "equal":
+        lo = value - abs(value) * tol - slack
+        hi = value + abs(value) * tol + slack
+        if not lo <= observed <= hi:
+            return (
+                f"{name}: {observed:.6g} outside [{lo:.6g}, {hi:.6g}] "
+                f"around baseline {value:.6g}"
+            )
+    else:
+        return f"{name}: unknown direction {direction!r}"
+    return None
+
+
+def run(baselines_path: str, bench_dir: str, update: bool) -> int:
+    with open(baselines_path) as f:
+        baselines = json.load(f)
+    default_tol = float(baselines.get("default_tolerance", 0.10))
+    docs: dict[str, dict] = {}
+    failures: list[str] = []
+    rows: list[tuple[str, str, str]] = []
+    for name, spec in baselines["metrics"].items():
+        fname = spec["file"]
+        if fname not in docs:
+            path = os.path.join(bench_dir, fname)
+            try:
+                with open(path) as f:
+                    docs[fname] = json.load(f)
+            except OSError as e:
+                failures.append(f"{name}: cannot read {path} ({e})")
+                docs[fname] = {}
+                continue
+        try:
+            observed = lookup(docs[fname], spec["path"])
+        except (KeyError, IndexError, TypeError):
+            failures.append(f"{name}: path {spec['path']!r} missing from {fname}")
+            continue
+        if update:
+            if "expect" in spec:
+                spec["expect"] = observed
+            else:
+                spec["value"] = observed
+            rows.append((name, repr(observed), "updated"))
+            continue
+        fail = check_metric(name, spec, observed, default_tol)
+        baseline = spec.get("value", spec.get("expect"))
+        rows.append(
+            (name, repr(observed), "FAIL" if fail else f"ok (baseline {baseline!r})")
+        )
+        if fail:
+            failures.append(fail)
+
+    width = max(len(r[0]) for r in rows) if rows else 0
+    for name, observed, status in rows:
+        print(f"  {name:<{width}}  {observed:>12}  {status}", file=sys.stderr)
+    if update:
+        with open(baselines_path, "w") as f:
+            json.dump(baselines, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"re-baselined {len(rows)} metrics -> {baselines_path}", file=sys.stderr)
+        return 0
+    for fail in failures:
+        print(f"REGRESSION: {fail}", file=sys.stderr)
+    if not failures:
+        print(f"bench-regression gate: {len(rows)} metrics ok", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES)
+    ap.add_argument(
+        "--dir",
+        default=".",
+        help="directory holding the BENCH_*.json files from the quick benches",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline values from the observed numbers",
+    )
+    args = ap.parse_args(argv)
+    raise SystemExit(run(args.baselines, args.dir, args.update))
+
+
+if __name__ == "__main__":
+    main()

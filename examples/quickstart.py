@@ -8,6 +8,7 @@ placement exercise for a JAX training job on a 2-pod TPU fleet.
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import ClusterTopology, STRATEGIES, simulate
+from repro.core.mapping import ONE_SHOT_STRATEGIES
 from repro.core.workloads import synt_workload_4
 from repro.configs import SHAPES, get_config
 from repro.core.meshplan import compare_strategies, tpu_topology
@@ -16,10 +17,13 @@ from repro.core.meshplan import compare_strategies, tpu_topology
 cluster = ClusterTopology()                # 16 nodes x 4 sockets x 4 cores
 jobs = synt_workload_4()                   # 8 jobs, mixed 2MB/64KB traffic
 print("paper cluster, Synt_workload_4 (waiting time, lower is better):")
-for name, strategy in STRATEGIES.items():
-    placement = strategy(jobs, cluster)
+# the one-shot heuristics, plus ONE simulator-in-the-loop search row —
+# every search:<seed> converges to the same answer here (multi-seed
+# portfolio, DESIGN.md §10), so listing more would print duplicates
+for name in ONE_SHOT_STRATEGIES + ("search:new",):
+    placement = STRATEGIES[name](jobs, cluster)
     result = simulate(jobs, placement, count_scale=0.1)
-    print(f"  {name:8s} {result.total_wait_ms:14.1f} ms")
+    print(f"  {name:16s} {result.total_wait_ms:14.1f} ms")
 
 # --- 2. the same idea on a TPU fleet --------------------------------------
 print("\nTPU fleet (2 pods x 256 chips), phi3.5-MoE train job placement:")

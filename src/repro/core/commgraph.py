@@ -16,8 +16,7 @@ bytes parsed from the compiled HLO).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -383,6 +383,11 @@ def new_mapping(jobs: Sequence[AppGraph], cluster: ClusterTopology,
     return placement
 
 
+# the one-shot heuristics — each commits to its first answer. The search
+# strategies below use this tuple as their portfolio of initial seeds.
+ONE_SHOT_STRATEGIES: tuple[str, ...] = (
+    "blocked", "cyclic", "drb", "new", "recursive_bisect")
+
 STRATEGIES: dict[str, Strategy] = {
     "blocked": blocked,
     "cyclic": cyclic,
@@ -390,3 +395,33 @@ STRATEGIES: dict[str, Strategy] = {
     "new": new_mapping,
     "recursive_bisect": recursive_bisect,
 }
+
+
+# ---------------------------------------------------------------------------
+# Batched placement search (repro.search, DESIGN.md §10) — registered here
+# so every STRATEGIES consumer (place_jobs / compare_strategies /
+# FleetScheduler / benches) can use the optimizer by name. The wrappers
+# import lazily: repro.search itself imports this module.
+# ---------------------------------------------------------------------------
+def make_search_strategy(seed: str, anneal: bool = False,
+                         **defaults) -> Strategy:
+    """Strategy-contract wrapper around ``repro.search``: seed with the
+    named one-shot strategy, refine with simulate_batch-scored neighbour
+    populations (hill-climbing, or simulated annealing when ``anneal``).
+    ``defaults`` (budget, population, rng_seed, ...) bind search knobs
+    onto the fixed ``(jobs, cluster, tracker)`` call signature."""
+
+    def _search(jobs, cluster, tracker=None, **kw):
+        from ..search import search_strategy  # lazy — avoids import cycle
+        merged = dict(defaults, **kw)
+        return search_strategy(jobs, cluster, tracker, seed=seed,
+                               anneal=anneal, **merged)
+
+    _search.__name__ = "anneal" if anneal else f"search:{seed}"
+    _search.__qualname__ = _search.__name__
+    return _search
+
+
+for _seed in ONE_SHOT_STRATEGIES:
+    STRATEGIES[f"search:{_seed}"] = make_search_strategy(_seed)
+STRATEGIES["anneal"] = make_search_strategy("new", anneal=True)

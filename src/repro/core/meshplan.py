@@ -31,7 +31,7 @@ import numpy as np
 from ..configs import FLEET, FleetConfig, ModelConfig, ShapeSpec
 from .commgraph import appgraph_for
 from .graphs import AppGraph, ClusterTopology, Placement
-from .mapping import STRATEGIES
+from .mapping import STRATEGIES, make_search_strategy
 
 
 def tpu_topology(n_pods: int = 2, fleet: FleetConfig = FLEET,
@@ -174,6 +174,9 @@ def new_mapping_tpu(jobs, topo: ClusterTopology,
 
 
 TPU_STRATEGIES = dict(STRATEGIES, new_tpu=new_mapping_tpu)
+# the batched search seeded from the TPU-adapted heuristic (the generic
+# search:* / anneal entries arrive via STRATEGIES, DESIGN.md §10)
+TPU_STRATEGIES["search:new_tpu"] = make_search_strategy("new_tpu")
 
 
 # ---------------------------------------------------------------------------

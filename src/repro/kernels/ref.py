@@ -7,7 +7,6 @@ scan — XLA SPMD partitions them).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -219,7 +218,6 @@ def causal_conv1d(x: jax.Array, w: jax.Array, *, cache: jax.Array | None = None)
 
 def conv1d_step(x_t: jax.Array, w: jax.Array, cache: jax.Array):
     """One-token conv. x_t: (b, c); cache: (b, k-1, c)."""
-    k = w.shape[0]
     window = jnp.concatenate([cache, x_t[:, None, :]], axis=1)  # (b,k,c)
     y = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype))
     return y, window[:, 1:, :]

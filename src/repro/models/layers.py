@@ -119,7 +119,6 @@ def attn_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
     Returns (out, new_k_cache, new_v_cache).
     """
     b = x.shape[0]
-    hd = cfg.resolved_head_dim
     positions = pos[:, None]  # (B,1)
     q, k_new, v_new = _qkv(p, x, cfg, positions if cfg.use_rope else None)
     if update_cache:

@@ -16,7 +16,6 @@ Backward memory is controlled by ``remat`` ('full' | 'dots' | 'none').
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax

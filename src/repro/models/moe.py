@@ -23,14 +23,13 @@ Distribution: two code paths with IDENTICAL numerics —
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs import ModelConfig
-from ..parallel import active_plan, shard
+from ..parallel import active_plan
 from .layers import dense_init, mlp_forward, mlp_init
 
 try:  # jax >= 0.6 exposes shard_map at top level

@@ -17,8 +17,8 @@ from .layers import dense_init, rmsnorm
 
 
 def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
-    s = cfg.ssm
     d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads
+    s = cfg.ssm
     gn = s.n_groups * s.state_dim
     conv_c = di + 2 * gn
     ks = jax.random.split(key, 7)
@@ -39,7 +39,6 @@ def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
 
 
 def _project(p, x, cfg: ModelConfig):
-    s = cfg.ssm
     z = x @ p["wz"]
     xin = x @ p["wx"]
     Bc = x @ p["wB"]

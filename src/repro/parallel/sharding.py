@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import math
 import re
 from typing import Any, Optional
 

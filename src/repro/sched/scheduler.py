@@ -211,6 +211,9 @@ class FleetScheduler:
                  count_scale: float = 0.02,
                  sim_backend: str = "auto",
                  remap_candidates: int = 4,
+                 remap_budget: Optional[int] = None,
+                 remap_population: int = 16,
+                 remap_rng_seed: int = 0,
                  reclock: bool = True):
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
@@ -225,6 +228,14 @@ class FleetScheduler:
         self.count_scale = count_scale
         self.sim_backend = resolve_backend(sim_backend)
         self.remap_candidates = max(1, remap_candidates)
+        # remap_budget switches the remap pass from the fixed
+        # remap_candidates reseed trials to the budgeted population
+        # search (repro.search moves scored through the same warm
+        # simulate_batch path, DESIGN.md §10); the budget caps
+        # placements scored per pass
+        self.remap_budget = remap_budget
+        self.remap_population = max(1, remap_population)
+        self._remap_rng = np.random.default_rng(remap_rng_seed)
         self.reclock = reclock
         # warm-start simulation handle: every projection below goes through
         # it so per-event cost is delta assembly + scans, not full rebuilds
@@ -480,11 +491,13 @@ class FleetScheduler:
         """Re-place contended jobs when projected utilisation is over
         threshold AND the wait reduction pays for the migration.
 
-        Up to ``remap_candidates`` trial moves (the most-contended live
-        jobs, each re-placed into the current free pool) are scored in ONE
-        ``simulate_batch`` call — on the JAX backend that is a single
-        batched scan, so K candidates cost about as much as one. The best
-        net-gain candidate is committed if profitable.
+        Default mode: up to ``remap_candidates`` trial moves (the
+        most-contended live jobs, each re-placed into the current free
+        pool) are scored in ONE ``simulate_batch`` call — on the JAX
+        backend that is a single batched scan, so K candidates cost about
+        as much as one. The best net-gain candidate is committed if
+        profitable. With ``remap_budget`` set, the fixed candidate list
+        becomes a budgeted population search (:meth:`_remap_search`).
         """
         if len(self.live) < 2:
             return
@@ -499,15 +512,89 @@ class FleetScheduler:
             self._util_samples.append(res.max_server_utilisation)
         if res.max_server_utilisation < self.util_threshold:
             return
-        # most-contended jobs still under their migration budget
-        movable = [j for j in res.per_job_wait
-                   if self.live[j].n_migrations < self.max_migrations_per_job]
+        if self.remap_budget:
+            self._remap_search(live, res)
+            return
+        movable = self._movable_jobs(res)
         if not movable:
             return
+        candidates = self._reseed_candidates(movable, self.remap_candidates)
+        if not candidates:
+            return
+        best, best_any = self._evaluate_candidates(live, res, candidates)
+        commit = best is not None
+        entry = best if commit else best_any
+        self.decisions.append(RemapDecision(
+            time=self.now, job_id=entry[1], wait_gain=entry[7],
+            bytes_moved=entry[5], migration_time=entry[6],
+            committed=commit))
+        if commit:
+            self._commit_remap(entry)
+
+    def _remap_search(self, live: list[AppGraph], res) -> None:
+        """Budgeted population search over the live placement (§10).
+
+        Each round builds a population — strategy reseeds of the most
+        contended jobs plus random single-job swap / migrate / subtree
+        moves from ``repro.search.moves`` — and scores it in one warm
+        ``simulate_batch`` (the ``SimHandle`` delta path, so the honest
+        clock's wall-time gate is unaffected). The best profitable move
+        is committed through the normal migration-cost bookkeeping and
+        the next round hill-climbs from the post-commit fleet, until the
+        evaluation budget is spent or no move pays for its migration.
+        """
+        from ..search.moves import SearchState, domain_sizes, neighbours
+
+        sizes = domain_sizes(self.cluster)
+        evals = 0
+        committed = 0
+        while evals < self.remap_budget:
+            movable = self._movable_jobs(res)
+            if not movable:
+                break
+            k = min(self.remap_population, self.remap_budget - evals)
+            candidates = self._reseed_candidates(movable, max(1, k // 4))
+            state = SearchState(
+                self.cluster,
+                {jid: j.cores.copy() for jid, j in self.live.items()},
+                (~self.tracker.used).copy())
+            for move, nxt in neighbours(self._remap_rng, state,
+                                        k - len(candidates), jobs=movable,
+                                        allow_cross_job=False, sizes=sizes):
+                jid = int(move.detail[0])
+                candidates.append((jid, nxt.assignments[jid]))
+            if not candidates:
+                break
+            evals += len(candidates)
+            best, best_any = self._evaluate_candidates(live, res, candidates)
+            if best is None:
+                if committed == 0 and best_any is not None:
+                    self.decisions.append(RemapDecision(
+                        time=self.now, job_id=best_any[1],
+                        wait_gain=best_any[7], bytes_moved=best_any[5],
+                        migration_time=best_any[6], committed=False))
+                break
+            self.decisions.append(RemapDecision(
+                time=self.now, job_id=best[1], wait_gain=best[7],
+                bytes_moved=best[5], migration_time=best[6], committed=True))
+            self._commit_remap(best)
+            committed += 1
+            res = best[8]      # the committed candidate IS the new baseline
+
+    def _movable_jobs(self, res) -> list[int]:
+        """Live jobs under their migration budget, most-contended first."""
+        movable = [j for j in res.per_job_wait
+                   if self.live[j].n_migrations < self.max_migrations_per_job]
         movable.sort(key=lambda j: (res.per_job_wait[j], j), reverse=True)
+        return movable
+
+    def _reseed_candidates(self, movable: list[int],
+                           k: int) -> list[tuple[int, np.ndarray]]:
+        """Trial re-placements: each of the top-k contended jobs re-run
+        through the admission strategy against the current free pool."""
         snap = self.tracker.snapshot()
-        candidates = []               # (job_id, old_cores, new_cores, moved)
-        for jid in movable[:self.remap_candidates]:
+        candidates: list[tuple[int, np.ndarray]] = []
+        for jid in movable[:k]:
             job = self.live[jid]
             self.tracker.release_cores(job.cores)
             try:
@@ -517,27 +604,34 @@ class FleetScheduler:
                 continue
             finally:
                 self.tracker.restore(snap)
-            new_cores = local.assignments[jid]
-            moved = int((self.cluster.node_of(new_cores)
-                         != self.cluster.node_of(job.cores)).sum())
-            candidates.append((jid, job.cores, new_cores, moved))
-        if not candidates:
-            return
+            candidates.append((jid, local.assignments[jid]))
+        return candidates
+
+    def _evaluate_candidates(self, live: list[AppGraph], res,
+                             candidates: list[tuple[int, np.ndarray]]):
+        """Score single-job trial moves in one warm ``simulate_batch``.
+
+        Returns ``(best, best_any)`` entries — best committable (actual
+        move, gain pays the migration) and best overall (recorded as the
+        reject decision when nothing commits).
+        """
         trials = []
-        for jid, _, new_cores, _ in candidates:
+        for jid, new_cores in candidates:
             trial = self.placement.copy()
             trial.assign(jid, new_cores)
             trials.append(trial)
         scored = self._sim.simulate_batch(live, trials)
         best = None        # best committable candidate (actual moves only)
         best_any = None    # best overall, recorded when nothing commits
-        for (jid, old_cores, new_cores, moved), res_new in zip(candidates,
-                                                               scored):
-            bytes_moved = moved * self.live[jid].state_bytes_per_proc
+        for (jid, new_cores), res_new in zip(candidates, scored):
+            job = self.live[jid]
+            moved = int((self.cluster.node_of(new_cores)
+                         != self.cluster.node_of(job.cores)).sum())
+            bytes_moved = moved * job.state_bytes_per_proc
             migration_time = bytes_moved / self.cluster.nic_bw
             gain = res.total_wait - res_new.total_wait
             net = gain - migration_time * self.migration_cost_factor
-            entry = (net, jid, old_cores, new_cores, moved, bytes_moved,
+            entry = (net, jid, job.cores, new_cores, moved, bytes_moved,
                      migration_time, gain, res_new)
             if best_any is None or net > best_any[0]:
                 best_any = entry
@@ -545,16 +639,13 @@ class FleetScheduler:
                 * self.migration_cost_factor
             if committable and (best is None or net > best[0]):
                 best = entry
-        commit = best is not None
+        return best, best_any
+
+    def _commit_remap(self, entry) -> None:
+        """Apply one scored move: claim cores, book migration cost, re-key."""
         (_, worst_id, old_cores, new_cores, moved, bytes_moved,
-         migration_time, gain, res_new) = best if commit else best_any
+         migration_time, gain, res_new) = entry
         job = self.live[worst_id]
-        self.decisions.append(RemapDecision(
-            time=self.now, job_id=worst_id, wait_gain=gain,
-            bytes_moved=bytes_moved, migration_time=migration_time,
-            committed=commit))
-        if not commit:
-            return
         self.tracker.release_cores(old_cores)
         self.tracker.take_cores(new_cores)
         self.placement.assign(worst_id, new_cores)

@@ -53,8 +53,8 @@ class AdamW:
     clip_norm: Optional[float] = 1.0
 
     def init(self, params) -> AdamWState:
-        f32 = lambda p: jax.tree.map(
-            lambda x: x.astype(jnp.float32), p)
+        def f32(p):
+            return jax.tree.map(lambda x: x.astype(jnp.float32), p)
         zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
         return AdamWState(step=jnp.zeros((), jnp.int32), master=f32(params),
                           mu=zeros,

@@ -1,6 +1,5 @@
 """Collective-traffic derivation + TPU mesh planning tests."""
 import numpy as np
-import pytest
 
 from repro.configs import SHAPES, get_config
 from repro.core.commgraph import (Collective, appgraph_for, job_collectives,
