@@ -106,6 +106,28 @@ def check_metric(name: str, spec: dict, observed, default_tol: float) -> str | N
     return None
 
 
+def check_traces(paths: list[str], bench_dir: str) -> list[str]:
+    """Schema-validate flight-recorder trace files (DESIGN.md §11).
+
+    Each file must parse as either a native ``repro-trace-v1`` document
+    (which must additionally survive the Chrome trace-event export) or an
+    already-exported Perfetto JSON. Returns failure messages.
+    """
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.obs.export import validate_file
+
+    fails = []
+    for path in paths:
+        full = path if os.path.isabs(path) or os.path.exists(path) \
+            else os.path.join(bench_dir, path)
+        probs = validate_file(full)
+        if probs:
+            fails.extend(f"{path}: {p}" for p in probs)
+        else:
+            print(f"  trace {path}: schema ok", file=sys.stderr)
+    return fails
+
+
 def run(baselines_path: str, bench_dir: str, update: bool) -> int:
     with open(baselines_path) as f:
         baselines = json.load(f)
@@ -173,8 +195,23 @@ def main(argv=None) -> None:
         action="store_true",
         help="rewrite the baseline values from the observed numbers",
     )
+    ap.add_argument(
+        "--trace",
+        nargs="+",
+        default=[],
+        metavar="FILE",
+        help="flight-recorder trace files to schema-validate "
+        "(native repro-trace-v1 or exported Perfetto JSON)",
+    )
     args = ap.parse_args(argv)
-    raise SystemExit(run(args.baselines, args.dir, args.update))
+    rc = run(args.baselines, args.dir, args.update)
+    if args.trace:
+        fails = check_traces(args.trace, args.dir)
+        for f in fails:
+            print(f"TRACE INVALID: {f}", file=sys.stderr)
+        if fails:
+            rc = 1
+    raise SystemExit(rc)
 
 
 if __name__ == "__main__":

@@ -18,9 +18,11 @@ wait and (b) the scheduler's core accounting survives the run.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 
+from repro import obs
 from repro.sched import FleetScheduler, get_trace
 
 STRATEGIES = ("blocked", "cyclic", "drb", "new", "recursive_bisect")
@@ -80,6 +82,10 @@ def main(argv=None) -> None:
     ap.add_argument("--sim-backend", default="auto")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: one ratio, short trace, hard assertions")
+    ap.add_argument("--trace", action="store_true",
+                    help="record a flight-recorder trace (repro.obs) of the "
+                         "sweep to --trace-out")
+    ap.add_argument("--trace-out", default="TRACE_hier.json")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
 
@@ -89,17 +95,28 @@ def main(argv=None) -> None:
               "params": {"rate": args.rate, "n_arrivals": n_arrivals,
                          "seed": args.seed, "sim_backend": args.sim_backend},
               "sweep": []}
-    for ratio in ratios:
-        row = run_ratio(ratio, tuple(args.strategies),
-                        n_arrivals=n_arrivals, rate=args.rate,
-                        seed=args.seed,
-                        remap_interval=None if args.no_remap
-                        else args.remap_interval,
-                        sim_backend=args.sim_backend)
-        report["sweep"].append(row)
-        msg = "  ".join(f"{s}={r['total_msg_wait']:.0f}s"
-                        for s, r in row["strategies"].items())
-        print(f"oversub {ratio:4.1f}: {msg}  rb_beats_all={row['rb_beats_all']}",
+    recorder = obs.Recorder() if args.trace else obs.from_env()
+    ctx = (obs.recording(recorder) if recorder is not None
+           else contextlib.nullcontext())
+    with ctx:
+        for ratio in ratios:
+            if recorder is not None:
+                recorder.set_process(f"hier:oversub{ratio:g}")
+            row = run_ratio(ratio, tuple(args.strategies),
+                            n_arrivals=n_arrivals, rate=args.rate,
+                            seed=args.seed,
+                            remap_interval=None if args.no_remap
+                            else args.remap_interval,
+                            sim_backend=args.sim_backend)
+            report["sweep"].append(row)
+            msg = "  ".join(f"{s}={r['total_msg_wait']:.0f}s"
+                            for s, r in row["strategies"].items())
+            print(f"oversub {ratio:4.1f}: {msg}  "
+                  f"rb_beats_all={row['rb_beats_all']}", file=sys.stderr)
+    if recorder is not None:
+        with open(args.trace_out, "w") as f:
+            f.write(recorder.dump_json())
+        print(f"trace: {recorder.n_events()} events -> {args.trace_out}",
               file=sys.stderr)
 
     text = json.dumps(report, indent=1, sort_keys=True)

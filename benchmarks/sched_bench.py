@@ -7,8 +7,8 @@ is replayed through ``repro.sched.FleetScheduler`` and the run is scored
 on makespan, total queue wait, total simulated message wait and the p99
 of per-node NIC utilisation.
 
-    PYTHONPATH=src python benchmarks/sched_bench.py --trace table4_poisson
-    PYTHONPATH=src python benchmarks/sched_bench.py --trace serve_fleet \
+    PYTHONPATH=src python benchmarks/sched_bench.py --scenario table4_poisson
+    PYTHONPATH=src python benchmarks/sched_bench.py --scenario serve_fleet \
         --strategies new new_tpu cyclic
     PYTHONPATH=src python benchmarks/sched_bench.py --quick  # CI smoke gate
 
@@ -19,17 +19,34 @@ additionally times both clocks on the acceptance traces
 (``table4_poisson``, ``serve_fleet``) and exits non-zero unless (a) the
 re-clocked end-to-end wall time stays within 2x the stale baseline (the
 incremental simulate path at work), (b) NewMapping still beats Blocked
-on total message wait, and (c) the fleet accounting survives every run.
+on total message wait, and (c) the fleet accounting survives every run;
+it also measures the disabled-recorder overhead ratio the baselines
+gate at <= 3%.
 
-Results are emitted as JSON on stdout (and to --out when given).
+``--trace`` records the run through the flight-recorder layer
+(DESIGN.md §11): every scheduler decision, simulator call and remap
+verdict lands in ``--trace-out`` (native ``repro-trace-v1`` JSON, plus
+a ``.perfetto.json`` sibling loadable at https://ui.perfetto.dev), with
+each strategy leg on its own Perfetto process. Dumps are byte-identical
+across repeated seeded runs; ``--trace-wall`` opts into the
+wall-clock profiling fields at the cost of that determinism.
+
+    PYTHONPATH=src python benchmarks/sched_bench.py \
+        --scenario rack_oversub --trace --trace-out TRACE_sched.json
+
+Results are emitted as JSON on stdout (and to --out when given), with
+each strategy's metrics registry merged into its row.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
 
+from repro import obs
+from repro.obs import export as obs_export
 from repro.sched import FleetScheduler, TRACES, get_trace
 
 DEFAULT_STRATEGIES = ("blocked", "cyclic", "drb", "new", "recursive_bisect")
@@ -51,7 +68,12 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
         kwargs["n_arrivals"] = n_arrivals
     results: dict[str, dict] = {}
     count_scale = None
+    rec = obs.current()
     for strategy in strategies:
+        if rec.enabled:
+            # one Perfetto process per strategy leg
+            rec.set_process(f"sched:{strategy}" if reclock
+                            else f"sched:{strategy}:stale")
         spec = get_trace(trace_name, **kwargs)       # fresh graphs per run
         count_scale = spec.count_scale
         sched = FleetScheduler(
@@ -67,7 +89,8 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
         stats = sched.run()
         wall = time.perf_counter() - t0
         sched.check_invariants()                     # fleet accounting intact
-        results[strategy] = dict(stats.to_dict(), wall_time_s=round(wall, 4))
+        results[strategy] = dict(stats.to_dict(), wall_time_s=round(wall, 4),
+                                 metrics=sched.metrics.to_dict())
 
     def wait(s: str) -> float:
         return results[s]["total_msg_wait"]
@@ -154,6 +177,49 @@ def clock_comparison(trace_name: str, strategy: str = "new", *,
     }
 
 
+def measure_obs_overhead(trace_name: str = "table4_poisson", *,
+                         n_arrivals: int = 12, seed: int = 0,
+                         repeats: int = 3) -> dict:
+    """Disabled-recorder overhead ratio, gated in ``baselines.json``.
+
+    The same quick run twice: once with the shared NULL no-op (nothing
+    installed — the default for every un-instrumented program) and once
+    with an explicit *disabled* ``Recorder`` passed into the scheduler.
+    Both take the one-attribute-test fast path; the ratio guards against
+    instrumentation creeping work in front of the ``enabled`` check.
+    Best-of-``repeats`` walls to push timer noise below the 3% band.
+    """
+    def once(recorder) -> float:
+        spec = get_trace(trace_name, seed=seed, n_arrivals=n_arrivals)
+        sched = FleetScheduler(
+            spec.cluster, "new", remap_interval=5.0,
+            state_bytes_per_proc=spec.state_bytes_per_proc,
+            count_scale=spec.count_scale, recorder=recorder)
+        sched.submit_trace(spec.arrivals)
+        t0 = time.perf_counter()
+        sched.run()
+        return time.perf_counter() - t0
+
+    # measure with nothing installed even when the caller is tracing —
+    # a recording base leg would make the ratio meaningless. Legs are
+    # interleaved (min-of-N each) so both see the same background load.
+    prev = obs.current()
+    obs.install(None)
+    try:
+        once(None)                                   # warm caches
+        disabled_rec = obs.Recorder(enabled=False)
+        base = disabled = float("inf")
+        for _ in range(repeats):
+            base = min(base, once(None))             # the NULL fast path
+            disabled = min(disabled, once(disabled_rec))
+    finally:
+        obs.install(prev if prev is not obs.NULL else None)
+    return {"trace": trace_name, "repeats": repeats,
+            "null_wall_s": round(base, 4),
+            "disabled_wall_s": round(disabled, 4),
+            "ratio": round(disabled / max(base, 1e-9), 3)}
+
+
 def _smoke_failures(report: dict) -> list[str]:
     """CI assertions for --quick; returns failure messages."""
     fails = []
@@ -198,8 +264,17 @@ def _print_table(report: dict) -> None:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--trace", default="table4_poisson",
+    ap.add_argument("--scenario", default="table4_poisson",
                     choices=sorted(TRACES), help="named arrival trace")
+    ap.add_argument("--trace", action="store_true",
+                    help="record a structured flight-recorder trace of the "
+                         "run (repro.obs, DESIGN.md §11)")
+    ap.add_argument("--trace-out", default="TRACE_sched.json",
+                    help="native trace output path (a .perfetto.json "
+                         "sibling is written next to it)")
+    ap.add_argument("--trace-wall", action="store_true",
+                    help="include wall-clock profiling fields in the trace "
+                         "(forfeits byte-determinism)")
     ap.add_argument("--strategies", nargs="+", default=list(DEFAULT_STRATEGIES))
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate, jobs/s (trace default if unset)")
@@ -229,31 +304,57 @@ def main(argv=None) -> None:
                   else tuple(args.strategies))
     remap_interval = None if args.no_remap else args.remap_interval
 
-    report = run_trace(
-        args.trace, strategies,
-        rate=args.rate, n_arrivals=n_arrivals, seed=args.seed,
-        remap_interval=remap_interval,
-        util_threshold=args.util_threshold, sim_backend=args.sim_backend,
-        reclock=not args.stale_clock)
-    if args.quick or args.clock_compare:
-        # quick gates the fixed acceptance traces at their default rates;
-        # --clock-compare mirrors exactly the run the user asked for
-        clock_traces = (("table4_poisson", None, 12),
-                        ("serve_fleet", None, None)) \
-            if args.quick else ((args.trace, args.rate, n_arrivals),)
-        report["clock"] = []
-        for t, r, n in clock_traces:
-            # the main table already ran this exact re-clocked config —
-            # reuse its row instead of replaying the deterministic run
-            same = (t == args.trace and r == args.rate and n == n_arrivals
-                    and "new" in report["strategies"]
-                    and not args.stale_clock)
-            report["clock"].append(clock_comparison(
-                t, rate=r, n_arrivals=n, seed=args.seed,
-                remap_interval=remap_interval,
-                util_threshold=args.util_threshold,
-                sim_backend=args.sim_backend,
-                reclock_row=report["strategies"]["new"] if same else None))
+    # disabled-recorder overhead first, before any recorder is installed
+    obs_overhead = measure_obs_overhead(seed=args.seed) if args.quick \
+        else None
+
+    recorder = obs.Recorder() if args.trace else obs.from_env()
+    ctx = (obs.recording(recorder) if recorder is not None
+           else contextlib.nullcontext())
+    with ctx:
+        report = run_trace(
+            args.scenario, strategies,
+            rate=args.rate, n_arrivals=n_arrivals, seed=args.seed,
+            remap_interval=remap_interval,
+            util_threshold=args.util_threshold, sim_backend=args.sim_backend,
+            reclock=not args.stale_clock)
+        if args.quick or args.clock_compare:
+            # quick gates the fixed acceptance traces at their default
+            # rates; --clock-compare mirrors exactly the run the user
+            # asked for
+            clock_traces = (("table4_poisson", None, 12),
+                            ("serve_fleet", None, None)) \
+                if args.quick else ((args.scenario, args.rate, n_arrivals),)
+            report["clock"] = []
+            for t, r, n in clock_traces:
+                # the main table already ran this exact re-clocked config —
+                # reuse its row instead of replaying the deterministic run
+                same = (t == args.scenario and r == args.rate
+                        and n == n_arrivals
+                        and "new" in report["strategies"]
+                        and not args.stale_clock)
+                report["clock"].append(clock_comparison(
+                    t, rate=r, n_arrivals=n, seed=args.seed,
+                    remap_interval=remap_interval,
+                    util_threshold=args.util_threshold,
+                    sim_backend=args.sim_backend,
+                    reclock_row=report["strategies"]["new"] if same
+                    else None))
+    if obs_overhead is not None:
+        report["obs_overhead"] = obs_overhead
+    if recorder is not None:
+        doc = recorder.dump(
+            extra_metrics={f"sched/{s}": row["metrics"]
+                           for s, row in report["strategies"].items()},
+            include_wall=args.trace_wall)
+        with open(args.trace_out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        perfetto_out = args.trace_out.replace(".json", "") + ".perfetto.json"
+        with open(perfetto_out, "w") as f:
+            json.dump(obs_export.to_chrome(doc, include_wall=args.trace_wall),
+                      f, indent=1, sort_keys=True)
+        print(f"trace: {recorder.n_events()} events -> {args.trace_out} "
+              f"(+ {perfetto_out})", file=sys.stderr)
     _print_table(report)
     text = json.dumps(report, indent=1, sort_keys=True)
     print(text)

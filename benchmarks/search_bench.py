@@ -28,10 +28,12 @@ within 500 simulator evaluations. Results are emitted as JSON on stdout
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
 
+from repro import obs
 from repro.core.graphs import ClusterTopology
 from repro.core.mapping import ONE_SHOT_STRATEGIES, STRATEGIES, make_search_strategy
 from repro.core.meshplan import tpu_topology
@@ -282,9 +284,17 @@ def main(argv=None) -> None:
         action="store_true",
         help="CI smoke: small budgets/traces, hard assertions",
     )
+    ap.add_argument("--trace", action="store_true",
+                    help="record a flight-recorder trace (repro.obs) of "
+                         "every search run to --trace-out")
+    ap.add_argument("--trace-out", default="TRACE_search.json")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
 
+    recorder = obs.Recorder() if args.trace else obs.from_env()
+    _rec_ctx = (obs.recording(recorder) if recorder is not None
+                else contextlib.nullcontext())
+    _rec_ctx.__enter__()
     budgets = args.budgets or ([48, 120] if args.quick else [60, 180, 480])
     scen_names = args.scenarios or (
         ["table4", "rack_oversub"] if args.quick else sorted(_scenarios())
@@ -340,6 +350,13 @@ def main(argv=None) -> None:
                 f"{s}={r['total_msg_wait']:.0f}s" for s, r in dyn["strategies"].items()
             )
             print(f"dynamic {dyn['trace']}: {msg}", file=sys.stderr)
+
+    _rec_ctx.__exit__(None, None, None)
+    if recorder is not None:
+        with open(args.trace_out, "w") as f:
+            f.write(recorder.dump_json())
+        print(f"trace: {recorder.n_events()} events -> {args.trace_out}",
+              file=sys.stderr)
 
     fails = gate_failures(report)
     report["gate"] = {"ok": not fails, "failures": fails, "eval_cap": EVAL_CAP}

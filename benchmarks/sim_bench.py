@@ -21,12 +21,14 @@ is at least as fast as the loop path.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.simulator import resolve_backend, simulate, simulate_batch
 from repro.sched import FleetScheduler, TRACES, get_trace
 
@@ -174,8 +176,12 @@ def _gate(report: dict) -> list[str]:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--trace", default="table4_poisson",
-                    choices=sorted(TRACES))
+    ap.add_argument("--scenario", default="table4_poisson",
+                    choices=sorted(TRACES), help="named arrival trace")
+    ap.add_argument("--trace", action="store_true",
+                    help="record a flight-recorder trace of the measured "
+                         "runs (repro.obs) to --trace-out")
+    ap.add_argument("--trace-out", default="TRACE_sim.json")
     ap.add_argument("--backends", nargs="+",
                     default=["segmented", "jax"],
                     choices=["segmented", "jax", "pallas"])
@@ -201,8 +207,17 @@ def main(argv=None) -> None:
             backends = [b for b in backends if b not in dropped]
 
     repeats = 3 if args.quick else args.repeats
-    report = run(args.trace, backends, repeats, args.batch_k,
-                 args.sched_arrivals, args.skip_sched)
+    recorder = obs.Recorder() if args.trace else obs.from_env()
+    ctx = (obs.recording(recorder) if recorder is not None
+           else contextlib.nullcontext())
+    with ctx:
+        report = run(args.scenario, backends, repeats, args.batch_k,
+                     args.sched_arrivals, args.skip_sched)
+    if recorder is not None:
+        with open(args.trace_out, "w") as f:
+            f.write(recorder.dump_json())
+        print(f"trace: {recorder.n_events()} events -> {args.trace_out}",
+              file=sys.stderr)
 
     for be, r in report["backends"].items():
         extra = ("" if be == "loop" else

@@ -47,11 +47,20 @@ from typing import Sequence
 
 import numpy as np
 
+from .. import obs
 from .graphs import AppGraph, ClusterTopology, Placement
 from .simulator import SimResult
 
 _SPAN_FLOOR = 1e-30       # utilisation denominator floor (matches loop)
 _DENSE_CUMMIN_CAP = 1 << 22   # max cells of the per-server min grid (32 MB)
+
+
+def _count(name: str, v: float = 1) -> None:
+    """Flat-assembly provenance counter on the installed recorder —
+    distinguishes warm reuse / delta patches / cache hits / full builds."""
+    rec = obs.current()
+    if rec.enabled:
+        rec.metrics.counter(name).inc(v)
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +287,7 @@ def flatten_delta(jobs: Sequence[AppGraph], count_scale: float,
     jobs = list(jobs)
     if prev is not None and count_scale == prev.count_scale:
         if [id(j) for j in jobs] == [id(j) for j in prev.jobs]:
+            _count("sim.flatten.reuse")
             return prev
         steps = _delta_steps(prev, jobs)
         if steps is not None:
@@ -288,6 +298,7 @@ def flatten_delta(jobs: Sequence[AppGraph], count_scale: float,
             for job in added:
                 flat = flat.with_job_added(job)
             _cache_put(flat)
+            _count("sim.flatten.delta")
             return flat
     return _flatten(jobs, count_scale)
 
@@ -306,8 +317,10 @@ def _flatten(jobs: Sequence[AppGraph], count_scale: float) -> _WorkloadFlat:
     if flat is None:
         flat = _WorkloadFlat(jobs, count_scale)
         _cache_put(flat)
+        _count("sim.flatten.build")
     else:
         _FLAT_CACHE.move_to_end(key)
+        _count("sim.flatten.cache_hit")
     return flat
 
 

@@ -36,6 +36,13 @@ class Event:
     def sort_key(self, seq: int) -> tuple:
         return (self.time, _KIND_PRIORITY[self.kind], seq)
 
+    def describe(self) -> str:
+        """Compact one-line rendering for traces and flight dumps."""
+        if self.kind == REMAP:
+            return f"t={self.time:g} remap"
+        tail = f" epoch={self.epoch}" if self.kind == DEPARTURE else ""
+        return f"t={self.time:g} {self.kind} job={self.job_id}{tail}"
+
 
 class EventQueue:
     """Min-heap of events ordered by (time, kind priority, insertion seq)."""

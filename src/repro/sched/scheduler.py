@@ -35,14 +35,25 @@ event-driven scheduler (DESIGN.md §3):
 
 Determinism: no wall clock, no unseeded randomness — identical traces
 yield identical schedules, which the tests rely on.
+
+Observability (DESIGN.md §11): every decision the scheduler takes —
+arrive / admit / queue / queue-drain / depart / remap-propose /
+remap-commit / remap-reject — is emitted as a structured trace event
+through ``repro.obs`` (a no-op unless a recorder is installed or passed
+in), and all utilisation sampling routes through ONE metrics hook
+(:meth:`FleetScheduler._sample_mutation`) fired exactly once per fleet
+mutation, so the p99 statistics in :class:`FleetStats` weight every
+mutation uniformly regardless of how often remap ticks fire.
 """
 from __future__ import annotations
 
 import dataclasses
+import sys
 from typing import Callable, Iterable, Optional, Sequence, Union
 
 import numpy as np
 
+from .. import obs
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
 from ..core.mapping import STRATEGIES
@@ -167,7 +178,19 @@ class RemapDecision:
 
 @dataclasses.dataclass
 class FleetStats:
-    """Aggregate outcome of one scheduler run."""
+    """Aggregate outcome of one scheduler run.
+
+    Two kinds of numbers live here (DESIGN.md §11): **per-job end state**
+    (``makespan`` / ``total_queue_wait`` / ``total_msg_wait`` /
+    ``migrated_bytes`` / ``per_job`` — one record per job, complete by
+    construction) and **per-mutation samples** (``nic_p99_util`` /
+    ``peak_sim_util`` / ``level_p99_util`` — statistics over the
+    utilisation samples taken once per fleet mutation).
+    ``sample_counts`` carries the record count behind every sampled
+    statistic so downstream consumers can tell a 3-sample p99 from a
+    3000-sample one; ``sampling_policy`` names the weighting contract
+    (one sample per admit/depart/remap-commit, never per event tick).
+    """
 
     n_jobs: int
     makespan: float                  # last departure (s, sim clock)
@@ -181,6 +204,10 @@ class FleetStats:
     per_job: dict[int, dict]
     level_p99_util: dict = dataclasses.field(default_factory=dict)
     # ^ p99 per hierarchy level of per-link utilisation samples (§9)
+    sample_counts: dict = dataclasses.field(default_factory=dict)
+    # ^ records behind each sampled statistic, e.g. {"peak_sim_util": 31,
+    #   "nic_util": 29, "level.rack": 29} — 0 samples -> the statistic is 0
+    sampling_policy: str = "per-mutation"
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -214,7 +241,8 @@ class FleetScheduler:
                  remap_budget: Optional[int] = None,
                  remap_population: int = 16,
                  remap_rng_seed: int = 0,
-                 reclock: bool = True):
+                 reclock: bool = True,
+                 recorder: Optional[obs.Recorder] = None):
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
         self._strategy = resolve_strategy(strategy)
@@ -255,10 +283,27 @@ class FleetScheduler:
         # here because scanning the heap would touch every superseded
         # departure event the re-clock leaves behind (lazy deletion)
         self.decisions: list[RemapDecision] = []
-        self._util_samples: list[float] = []      # sim peak-server utilisation
-        self._nic_util_samples: list[np.ndarray] = []  # per-node NIC util
-        self._level_util_samples: dict[str, list[np.ndarray]] = {}
+        # all utilisation sampling lives in the metrics registry (§11):
+        # histogram sched.peak_sim_util, series util.nic / util.level.*,
+        # each fed by the ONE per-mutation hook _sample_mutation
+        self.metrics = obs.Metrics()
+        # trace recorder: the explicit argument wins; otherwise whatever
+        # is installed process-wide at event time (obs.install / the
+        # REPRO_TRACE opt-in) — the NULL no-op by default
+        self._recorder = recorder
         self._remap_scheduled = False
+
+    @property
+    def recorder(self) -> obs.Recorder:
+        """The active trace recorder (NULL no-op when tracing is off)."""
+        return self._recorder if self._recorder is not None else obs.current()
+
+    @property
+    def _util_samples(self) -> list[float]:
+        """Raw peak-server-utilisation samples (one per fleet mutation);
+        kept as a view into the metrics registry for tests/consumers of
+        the historical attribute."""
+        return self.metrics.histogram("sched.peak_sim_util").samples
 
     # -- low-level fleet mutations (immediate) -------------------------------
     def admit(self, graph: AppGraph, now: Optional[float] = None,
@@ -291,6 +336,12 @@ class FleetScheduler:
         job.placed_at = now
         self.live[job.job_id] = job
         self._last_res = None
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("admit", ts=now, track="events", job=job.job_id,
+                        job_name=graph.name, procs=graph.n_procs,
+                        nodes=int(np.unique(self.cluster.node_of(cores)).size),
+                        strategy=self.strategy_name)
         return job
 
     def depart(self, job_id: int, now: Optional[float] = None) -> SchedJob:
@@ -304,6 +355,17 @@ class FleetScheduler:
         job.departure = now if job.departure is None else job.departure
         self.done[job_id] = job
         self._last_res = None
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("depart", ts=now, track="events", job=job_id,
+                        msg_wait=job.msg_wait, migrations=job.n_migrations)
+            if job.placed_at is not None:
+                # the job's whole residency as one span on its own track
+                rec.span(f"job:{job_id}", ts=job.placed_at,
+                         dur=now - job.placed_at, track=f"job:{job_id:03d}",
+                         job=job_id, job_name=job.graph.name,
+                         procs=job.graph.n_procs, msg_wait=job.msg_wait,
+                         migrations=job.n_migrations)
         return job
 
     # -- high-level event API --------------------------------------------------
@@ -345,6 +407,9 @@ class FleetScheduler:
                 # (its rare stale events DID advance the clock + sample).
                 return ev
         self.now = max(self.now, ev.time)
+        rec = self.recorder
+        if rec.enabled:
+            rec.set_clock(self.now)
         if self.reclock:
             self._advance_work()
         if ev.kind == ARRIVAL:
@@ -356,13 +421,27 @@ class FleetScheduler:
             self._remap_scheduled = False
             self._remap_pass()
             self._maybe_schedule_remap()
-        self._sample_nic_util()
         return ev
 
     def run(self) -> FleetStats:
-        """Play all events; returns aggregate fleet statistics."""
-        while self.step() is not None:
-            pass
+        """Play all events; returns aggregate fleet statistics.
+
+        When a recorder is active, any exception escaping the event loop
+        carries the flight recorder's event tail (the timeline that led
+        to the failure) as an exception note / stderr dump.
+        """
+        try:
+            while self.step() is not None:
+                pass
+        except Exception as e:
+            rec = self.recorder
+            if rec.enabled and not isinstance(e, SchedulerInvariantError):
+                dump = rec.flight_dump()
+                if dump and hasattr(e, "add_note"):      # py3.11+
+                    e.add_note(dump)
+                elif dump:                               # pragma: no cover
+                    print(dump, file=sys.stderr)
+            raise
         return self.stats()
 
     # -- the re-clocking engine (DESIGN.md §3) ---------------------------------
@@ -400,7 +479,7 @@ class FleetScheduler:
         if res is None:
             res = self._sim.simulate(self._live_graphs(), self.placement)
         self._last_res = res
-        self._util_samples.append(res.max_server_utilisation)
+        self._sample_mutation(res)
         for job in self.live.values():
             job.sim_finish = max(res.job_finish[job.job_id], 1e-9)
             job.wait_proj = res.per_job_wait[job.job_id]
@@ -416,10 +495,19 @@ class FleetScheduler:
 
     # -- event handlers ----------------------------------------------------------
     def _handle_arrival(self, job: SchedJob) -> None:
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("arrive", track="events", job=job.job_id,
+                        job_name=job.graph.name, procs=job.graph.n_procs)
         # strict FIFO: while anyone is queued, later arrivals queue behind
         # them (head-of-line blocking) instead of jumping ahead
         if self.pending or job.graph.n_procs > self.tracker.total_free():
             self.pending.append(job.job_id)
+            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
+                                                        self.now)
+            if rec.enabled:
+                rec.instant("queue", track="events", job=job.job_id,
+                            depth=len(self.pending))
             return
         self._place_and_clock(job)
         self._maybe_schedule_remap()
@@ -438,6 +526,11 @@ class FleetScheduler:
             if head.graph.n_procs > self.tracker.total_free():
                 break
             self.pending.pop(0)
+            rec = self.recorder
+            if rec.enabled:
+                rec.instant("queue_drain", track="events", job=head.job_id,
+                            queue_wait=self.now - head.arrival,
+                            depth=len(self.pending))
             if self.reclock:
                 # admit the whole drained batch first; the single
                 # _reclock below keys them all (and the survivors) at
@@ -447,6 +540,8 @@ class FleetScheduler:
                 head.last_clock = self.now
             else:
                 self._place_and_clock(head)
+            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
+                                                        self.now)
             placed_any = True
         if self.reclock:
             # one simulate covers the drained jobs AND the survivors'
@@ -473,7 +568,7 @@ class FleetScheduler:
         job.sim_finish = duration
         job.departure = self.now + duration
         self._last_res = res
-        self._util_samples.append(res.max_server_utilisation)
+        self._sample_mutation(res)
         self.events.push(Event(time=job.departure, kind=DEPARTURE,
                                job_id=job.job_id, epoch=job.epoch))
 
@@ -503,13 +598,14 @@ class FleetScheduler:
             return
         live = self._live_graphs()
         # the fleet is unchanged since the last re-clock on most remap
-        # ticks — reuse its SimResult (already sampled into
-        # _util_samples then) rather than re-simulating
+        # ticks — reuse its SimResult (sampled by _sample_mutation at the
+        # mutation) rather than re-simulating; when it IS missing (stale
+        # mode after a departure) the fresh simulate is tick-driven, not
+        # mutation-driven, so it deliberately takes no utilisation sample
         res = self._last_res
         if res is None:
             res = self._sim.simulate(live, self.placement)
             self._last_res = res
-            self._util_samples.append(res.max_server_utilisation)
         if res.max_server_utilisation < self.util_threshold:
             return
         if self.remap_budget:
@@ -523,13 +619,9 @@ class FleetScheduler:
             return
         best, best_any = self._evaluate_candidates(live, res, candidates)
         commit = best is not None
-        entry = best if commit else best_any
-        self.decisions.append(RemapDecision(
-            time=self.now, job_id=entry[1], wait_gain=entry[7],
-            bytes_moved=entry[5], migration_time=entry[6],
-            committed=commit))
+        self._record_decision(best if commit else best_any, commit)
         if commit:
-            self._commit_remap(entry)
+            self._commit_remap(best)
 
     def _remap_search(self, live: list[AppGraph], res) -> None:
         """Budgeted population search over the live placement (§10).
@@ -569,17 +661,28 @@ class FleetScheduler:
             best, best_any = self._evaluate_candidates(live, res, candidates)
             if best is None:
                 if committed == 0 and best_any is not None:
-                    self.decisions.append(RemapDecision(
-                        time=self.now, job_id=best_any[1],
-                        wait_gain=best_any[7], bytes_moved=best_any[5],
-                        migration_time=best_any[6], committed=False))
+                    self._record_decision(best_any, committed=False)
                 break
-            self.decisions.append(RemapDecision(
-                time=self.now, job_id=best[1], wait_gain=best[7],
-                bytes_moved=best[5], migration_time=best[6], committed=True))
+            self._record_decision(best, committed=True)
             self._commit_remap(best)
             committed += 1
             res = best[8]      # the committed candidate IS the new baseline
+
+    def _record_decision(self, entry, committed: bool) -> None:
+        """Book one remap verdict: decision record, counter, trace event
+        (commit/reject with the savings-vs-migration-cost breakdown)."""
+        self.decisions.append(RemapDecision(
+            time=self.now, job_id=entry[1], wait_gain=entry[7],
+            bytes_moved=entry[5], migration_time=entry[6],
+            committed=committed))
+        self.metrics.counter("sched.remap_commits" if committed
+                             else "sched.remap_rejects").inc()
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("remap_commit" if committed else "remap_reject",
+                        track="remap", job=entry[1], net_gain=entry[0],
+                        wait_gain=entry[7], bytes_moved=entry[5],
+                        migration_time=entry[6], procs_moved=entry[4])
 
     def _movable_jobs(self, res) -> list[int]:
         """Live jobs under their migration budget, most-contended first."""
@@ -615,6 +718,13 @@ class FleetScheduler:
         move, gain pays the migration) and best overall (recorded as the
         reject decision when nothing commits).
         """
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("remap_propose", track="remap",
+                        n_candidates=len(candidates),
+                        jobs=sorted({jid for jid, _ in candidates}),
+                        peak_util=res.max_server_utilisation)
+        self.metrics.counter("sched.remap_evals").inc(len(candidates))
         trials = []
         for jid, new_cores in candidates:
             trial = self.placement.copy()
@@ -667,7 +777,7 @@ class FleetScheduler:
         # projected waits so committed gains (and collateral damage) show
         # up in the final metrics, and shift only the migrated job
         self._last_res = res_new
-        self._util_samples.append(res_new.max_server_utilisation)
+        self._sample_mutation(res_new)
         for jid, w in res_new.per_job_wait.items():
             self.live[jid].msg_wait = w
         if job.departure is not None:
@@ -681,62 +791,104 @@ class FleetScheduler:
     def _live_graphs(self) -> list[AppGraph]:
         return [j.graph for j in self.live.values()]
 
-    def _sample_nic_util(self) -> None:
+    def _sample_mutation(self, res) -> None:
+        """THE utilisation-sampling hook (DESIGN.md §11).
+
+        Every post-mutation simulate result lands here exactly once —
+        from the admit/drain/depart/remap-commit re-clock, the
+        stale-mode placement path, and the stale-mode remap commit — and
+        from nowhere else. The sampled statistics (``peak_sim_util``,
+        ``nic_p99_util``, ``level_p99_util``) therefore weight every
+        fleet mutation uniformly: a remap-heavy run takes exactly as
+        many samples per mutation as an admit-only one, where the old
+        per-event-tick sampling oversampled whenever remap ticks fired
+        on an unchanged fleet.
+        """
+        self.metrics.histogram("sched.peak_sim_util").observe(
+            res.max_server_utilisation)
+        self.metrics.gauge("sched.live_jobs").set(len(self.live), self.now)
         if not self.live:
             return
         levels = projected_level_loads(self._live_graphs(), self.placement,
                                        self.cluster)
         top = self.cluster.net_hierarchy().levels[-1].name
+        rec = self.recorder
         for name, d in levels.items():
             util = np.maximum(d["tx"], d["rx"]) / d["bw"]
-            self._level_util_samples.setdefault(name, []).append(util)
+            self.metrics.series(f"util.level.{name}").append(self.now, util)
+            if rec.enabled:
+                rec.counter(f"util.level.{name}",
+                            {"max": float(util.max()),
+                             "mean": float(util.mean())}, ts=self.now)
             if name == top:
                 # historical per-node NIC view: TX+RX over nic_bw
-                self._nic_util_samples.append(
-                    (d["tx"] + d["rx"]) / self.cluster.nic_bw)
+                nic = (d["tx"] + d["rx"]) / self.cluster.nic_bw
+                self.metrics.series("util.nic").append(self.now, nic)
+                if rec.enabled:
+                    rec.counter("util.nic",
+                                {"max": float(nic.max()),
+                                 "mean": float(nic.mean())}, ts=self.now)
+
+    def _invariant(self, msg: str) -> None:
+        """Raise :class:`SchedulerInvariantError` carrying the flight
+        recorder's event tail — the timeline that led to the violation —
+        when tracing is on (exception note on py3.11+, stderr before)."""
+        err = SchedulerInvariantError(msg)
+        rec = self.recorder
+        if rec.enabled:
+            dump = rec.flight_dump()
+            if dump and hasattr(err, "add_note"):
+                err.add_note(dump)
+            elif dump:                               # pragma: no cover
+                print(dump, file=sys.stderr)
+        raise err
 
     def check_invariants(self) -> None:
         """free cores == all cores - live cores; live placements intact."""
         used = np.zeros(self.cluster.n_cores, dtype=bool)
         if set(self.placement.assignments) != set(self.live):
-            raise SchedulerInvariantError(
+            self._invariant(
                 f"placement jobs {sorted(self.placement.assignments)} != "
                 f"live jobs {sorted(self.live)}")
         for jid, job in self.live.items():
             cores = self.placement.assignments[jid]
             if job.cores is None or not np.array_equal(cores, job.cores):
-                raise SchedulerInvariantError(f"job {jid} placement drifted")
+                self._invariant(f"job {jid} placement drifted")
             if cores.size != job.graph.n_procs:
-                raise SchedulerInvariantError(f"job {jid} lost processes")
+                self._invariant(f"job {jid} lost processes")
             if cores.min() < 0 or cores.max() >= self.cluster.n_cores:
-                raise SchedulerInvariantError(f"job {jid} core out of range")
+                self._invariant(f"job {jid} core out of range")
             if used[cores].any():
-                raise SchedulerInvariantError(f"job {jid} double-assigned core")
+                self._invariant(f"job {jid} double-assigned core")
             used[cores] = True
         if not np.array_equal(used, self.tracker.used):
             leaked = int((self.tracker.used & ~used).sum())
             phantom = int((used & ~self.tracker.used).sum())
-            raise SchedulerInvariantError(
+            self._invariant(
                 f"tracker drift: {leaked} leaked, {phantom} phantom cores")
 
     def stats(self) -> FleetStats:
         finished = [j for j in self.jobs.values() if j.departure is not None]
         placed = [j for j in self.jobs.values() if j.placed_at is not None]
-        if self._nic_util_samples:
-            all_util = np.concatenate(self._nic_util_samples)
-            nic_p99 = float(np.percentile(all_util, 99))
-        else:
-            nic_p99 = 0.0
-        level_p99 = {
-            name: float(np.percentile(np.concatenate(samples), 99))
-            for name, samples in self._level_util_samples.items()}
+        peak_hist = self.metrics.histogram("sched.peak_sim_util")
+        nic_p99 = self.metrics.series("util.nic").percentile(99)
+        level_p99 = {}
+        sample_counts = {"peak_sim_util": peak_hist.n,
+                         "nic_util": self.metrics.series("util.nic").n}
+        for name in self.metrics.names():
+            if not name.startswith("util.level."):
+                continue
+            s = self.metrics.series(name)
+            level = name[len("util.level."):]
+            level_p99[level] = s.percentile(99)
+            sample_counts[f"level.{level}"] = s.n
         return FleetStats(
             n_jobs=len(self.jobs),
             makespan=max((j.departure for j in finished), default=0.0),
             total_queue_wait=float(sum(j.queue_wait for j in placed)),
             total_msg_wait=float(sum(j.msg_wait for j in placed)),
             nic_p99_util=nic_p99,
-            peak_sim_util=max(self._util_samples, default=0.0),
+            peak_sim_util=max(peak_hist.samples, default=0.0),
             n_remap_commits=sum(1 for d in self.decisions if d.committed),
             n_remap_rejects=sum(1 for d in self.decisions if not d.committed),
             migrated_bytes=float(sum(j.migrated_bytes for j in self.jobs.values())),
@@ -750,4 +902,5 @@ class FleetScheduler:
                 "n_migrations": j.n_migrations,
             } for j in self.jobs.values()},
             level_p99_util=level_p99,
+            sample_counts=sample_counts,
         )

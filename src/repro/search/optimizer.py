@@ -25,10 +25,12 @@ backend.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from .. import obs
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
 from ..core.mapping import ONE_SHOT_STRATEGIES, STRATEGIES
@@ -140,6 +142,12 @@ def search_placement(jobs: Sequence[AppGraph], cluster: ClusterTopology,
     cores is the strategy adapter's job (``repro.search.strategy``).
     """
     seed_fn, seed_name = _resolve_seed(seed)
+    rec = obs.current()
+    t0_wall = time.perf_counter() if rec.enabled else 0.0
+    if rec.enabled:
+        rec.instant("search_begin", cat=obs.CAT_SEARCH, track="search",
+                    seed=seed_name, budget=budget, population=population,
+                    anneal=anneal, n_jobs=len(jobs))
     base_used = (tracker.used.copy() if tracker is not None
                  else np.zeros(cluster.n_cores, dtype=bool))
     usable = ~base_used
@@ -182,6 +190,10 @@ def search_placement(jobs: Sequence[AppGraph], cluster: ClusterTopology,
     trajectory: list[tuple] = []
     if best_i != 0:
         trajectory.append((evaluations, ("seed", kept[best_i]), best_score))
+    if rec.enabled:
+        rec.instant("search_seeds", cat=obs.CAT_SEARCH, track="search",
+                    n_seeds=len(kept), best_seed=kept[best_i],
+                    best_score=best_score, evals=evaluations)
 
     # -- refinement rounds -------------------------------------------------
     rounds = max(0, (budget - evaluations) // max(population, 1))
@@ -204,13 +216,34 @@ def search_placement(jobs: Sequence[AppGraph], cluster: ClusterTopology,
             pick = min(range(len(cand_scores)),
                        key=lambda i: (cand_scores[i], i))
             if cand_scores[pick] >= best_score:
+                if rec.enabled:
+                    rec.instant("search_reject", cat=obs.CAT_SEARCH,
+                                track="search", evals=evaluations,
+                                best_score=best_score)
                 continue
             cur, cur_score = cand_states[pick], cand_scores[pick]
         if cur_score < best_score:
             best, best_score = cur, cur_score
             trajectory.append((evaluations, cands[pick][0].describe(),
                                best_score))
+            if rec.enabled:
+                rec.instant("search_accept", cat=obs.CAT_SEARCH,
+                            track="search", evals=evaluations,
+                            move=str(trajectory[-1][1]), score=best_score)
+        elif rec.enabled:
+            rec.instant("search_reject", cat=obs.CAT_SEARCH, track="search",
+                        evals=evaluations, best_score=best_score)
 
+    if rec.enabled:
+        wall = time.perf_counter() - t0_wall
+        rec.metrics.counter("search.evals").inc(evaluations)
+        rec.metrics.counter("search.accepts").inc(len(trajectory))
+        rec.metrics.gauge("search.evals_per_s", wall=True).set(
+            evaluations / wall if wall > 0 else 0.0)
+        rec.instant("search_end", cat=obs.CAT_SEARCH, track="search",
+                    evals=evaluations, accepted=len(trajectory),
+                    objective=best_score, seed_objective=seed_objective,
+                    wall=wall)
     return SearchResult(
         placement=best.placement(), objective=best_score,
         seed_objective=seed_objective, seed_name=seed_name,
