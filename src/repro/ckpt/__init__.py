@@ -1,6 +1,8 @@
-from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from .checkpoint import (CheckpointCostModel, CheckpointManager,
+                         load_checkpoint, save_checkpoint)
 from .fault_tolerance import (ElasticReMesher, HeartbeatMonitor,
-                              StragglerTracker)
+                              ReMeshResult, StragglerTracker)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
-           "ElasticReMesher", "HeartbeatMonitor", "StragglerTracker"]
+__all__ = ["CheckpointCostModel", "CheckpointManager", "load_checkpoint",
+           "save_checkpoint", "ElasticReMesher", "HeartbeatMonitor",
+           "ReMeshResult", "StragglerTracker"]

@@ -15,18 +15,61 @@ restart): the on-disk format is mesh-free.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import math
 import os
 import queue
 import re
 import threading
 from typing import Any, Optional
 
-import jax
 import numpy as np
 
 
+def _jax():
+    # deferred: the fleet scheduler imports this module only for the
+    # cost model below and must not pay (or require) a jax import
+    import jax
+    return jax
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointCostModel:
+    """Prices a restart for the fleet scheduler (DESIGN.md §12).
+
+    Progress is measured in *work seconds* (the honest clock's
+    ``work_done * sim_finish``).  A killed job resumes from its last
+    checkpoint publish — everything since is lost work — and re-reads its
+    state through the NIC before making progress again, which the
+    scheduler books as work debt (the same ledger migration stalls use).
+
+    ``interval_s <= 0`` means continuous checkpointing: restarts lose
+    nothing and only pay the restore traffic.
+    """
+
+    interval_s: float = 30.0
+
+    def last_checkpoint(self, progress_s: float) -> float:
+        """Progress position of the most recent checkpoint publish."""
+        progress_s = max(progress_s, 0.0)
+        if self.interval_s <= 0.0:
+            return progress_s
+        return math.floor(progress_s / self.interval_s) * self.interval_s
+
+    def lost_work(self, progress_s: float) -> float:
+        """Work seconds discarded by a restart at ``progress_s``."""
+        return max(progress_s, 0.0) - self.last_checkpoint(progress_s)
+
+    def restore_seconds(self, state_bytes: float, nic_bw: float) -> float:
+        """Restore stall: re-reading state, priced through the NIC."""
+        if nic_bw <= 0.0:
+            return 0.0
+        return float(state_bytes) / float(nic_bw)
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
+    jax = _jax()
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
@@ -34,6 +77,8 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 
 def _unflatten(tree_like, flat: dict[str, np.ndarray]):
+    jax = _jax()
+
     def one(path, like):
         key = jax.tree_util.keystr(path)
         arr = flat[key]
@@ -51,6 +96,7 @@ def save_checkpoint(path: str, tree: Any) -> None:
 
 
 def load_checkpoint(path: str, tree_like: Any, shardings: Any = None) -> Any:
+    jax = _jax()
     with np.load(path) as z:
         flat = {k: z[k] for k in z.files}
     tree = _unflatten(tree_like, flat)

@@ -28,6 +28,18 @@ import numpy as np
 # Heartbeats
 # ---------------------------------------------------------------------------
 class HeartbeatMonitor:
+    """Per-host liveness registry.
+
+    ``clock`` defaults to wall-clock ``time.monotonic`` for production
+    use; deterministic consumers — the fleet scheduler's failure engine —
+    MUST inject their own clock (sim time) so ``last_seen`` and anything
+    derived from it in trace dumps is byte-identical across seeded runs.
+
+    ``beat`` on a dead host refreshes ``last_seen`` but does not revive:
+    resurrection is a control-plane decision (:meth:`revive`), not an
+    accidental side effect of a late packet.
+    """
+
     def __init__(self, n_hosts: int, deadline_s: float = 60.0,
                  clock: Callable[[], float] = time.monotonic):
         self.n_hosts = n_hosts
@@ -42,6 +54,11 @@ class HeartbeatMonitor:
 
     def mark_dead(self, host: int) -> None:
         self.alive[host] = False
+
+    def revive(self, host: int) -> None:
+        """Bring a repaired host back: alive, with a fresh heartbeat."""
+        self.alive[host] = True
+        self.last_seen[host] = self.clock()
 
     def sweep(self) -> list[int]:
         """Returns hosts newly declared dead."""
@@ -90,15 +107,25 @@ class ElasticReMesher:
             for h in sorted(alive_hosts)]) if alive_hosts else np.array([], int)
         n = chips.size
         data = n // self.model_size
-        # largest power-of-two data axis (keeps batch divisibility simple)
-        while data & (data - 1):
-            data &= data - 1
+        # largest power-of-two data axis (keeps batch divisibility simple),
+        # written as 2**floor(log2(data)) — the old ``data &= data - 1``
+        # loop computed the same value but hid that every non-power-of-two
+        # remainder slice is dropped on the floor
+        data = (1 << (data.bit_length() - 1)) if data > 0 else 0
         usable = data * self.model_size
-        order = np.arange(n)
+        order = np.arange(usable)
         if self.planner is not None and usable:
-            order = np.asarray(self.planner(chips[:usable]))
+            planned = np.asarray(self.planner(chips[:usable]))
+            if not np.array_equal(np.sort(planned), np.sort(chips[:usable])):
+                raise ValueError("planner must return a permutation of the "
+                                 "chip ids it was given")
+            # the planner speaks global chip ids (it sees the degraded
+            # cluster), but device_order is defined as indices into the
+            # surviving-device list — translate back.  ``chips`` is sorted
+            # ascending, so searchsorted inverts the id -> index map.
+            order = np.searchsorted(chips, planned)
         return ReMeshResult(data_size=int(data), model_size=self.model_size,
-                            device_order=order[:usable],
+                            device_order=order,
                             dropped_chips=int(n - usable))
 
 

@@ -389,11 +389,20 @@ class Placement:
 
 
 class FreeCoreTracker:
-    """Mutable free/used view of a ClusterTopology used while mapping."""
+    """Mutable free/used view of a ClusterTopology used while mapping.
+
+    Two orthogonal masks: ``used`` (a job holds the core) and ``offline``
+    (the core's node is dead or draining — unschedulable regardless of
+    occupancy).  A core is *free* only when neither is set; all queries
+    and selection helpers go through :meth:`free_mask`.  Snapshots carry
+    only ``used``: offline state never changes inside a remap trial, so
+    restore cannot corrupt it.
+    """
 
     def __init__(self, cluster: ClusterTopology, occupied: np.ndarray | None = None):
         self.cluster = cluster
         self.used = np.zeros(cluster.n_cores, dtype=bool)
+        self.offline = np.zeros(cluster.n_cores, dtype=bool)
         if occupied is not None:
             self.used |= occupied
 
@@ -412,25 +421,48 @@ class FreeCoreTracker:
             raise ValueError("snapshot shape mismatch")
         self.used = snap.copy()
 
+    # -- availability ----------------------------------------------------------
+    def free_mask(self) -> np.ndarray:
+        """Boolean mask of schedulable cores: neither used nor offline."""
+        return ~(self.used | self.offline)
+
+    def set_offline(self, cores: np.ndarray) -> None:
+        """Mark cores unschedulable (node died or is draining).
+
+        Occupancy is untouched: a live job's cores stay ``used`` until the
+        scheduler evicts or migrates it, so accounting never double-frees.
+        """
+        cores = np.asarray(cores, dtype=np.int64)
+        if cores.size and (cores.min() < 0 or cores.max() >= self.cluster.n_cores):
+            raise ValueError("core id out of range")
+        self.offline[cores] = True
+
+    def set_online(self, cores: np.ndarray) -> None:
+        """Return recovered cores to the schedulable pool."""
+        cores = np.asarray(cores, dtype=np.int64)
+        if cores.size and (cores.min() < 0 or cores.max() >= self.cluster.n_cores):
+            raise ValueError("core id out of range")
+        self.offline[cores] = False
+
     # -- queries -------------------------------------------------------------
     def free_in_node(self, node: int) -> int:
         c = self.cluster
         lo = node * c.cores_per_node
-        return int((~self.used[lo:lo + c.cores_per_node]).sum())
+        return int(self.free_mask()[lo:lo + c.cores_per_node].sum())
 
     def free_in_socket(self, node: int, socket: int) -> int:
         c = self.cluster
         lo = node * c.cores_per_node + socket * c.cores_per_socket
-        return int((~self.used[lo:lo + c.cores_per_socket]).sum())
+        return int(self.free_mask()[lo:lo + c.cores_per_socket].sum())
 
     def free_per_node(self) -> np.ndarray:
-        return (~self.used).reshape(self.cluster.n_nodes, -1).sum(axis=1)
+        return self.free_mask().reshape(self.cluster.n_nodes, -1).sum(axis=1)
 
     def free_cores_avg(self) -> float:
         return float(self.free_per_node().mean())
 
     def total_free(self) -> int:
-        return int((~self.used).sum())
+        return int(self.free_mask().sum())
 
     # -- selection (paper steps 3.5 / 3.6) ------------------------------------
     def node_with_most_free(self) -> int:
@@ -453,14 +485,14 @@ class FreeCoreTracker:
             socket = self.socket_with_most_free(node)
         lo = node * c.cores_per_node + socket * c.cores_per_socket
         for slot in range(c.cores_per_socket):
-            if not self.used[lo + slot]:
+            if not self.used[lo + slot] and not self.offline[lo + slot]:
                 self.used[lo + slot] = True
                 return lo + slot
         # socket full — fall back to any socket in the node
         for s in range(c.sockets_per_node):
             lo = node * c.cores_per_node + s * c.cores_per_socket
             for slot in range(c.cores_per_socket):
-                if not self.used[lo + slot]:
+                if not self.used[lo + slot] and not self.offline[lo + slot]:
                     self.used[lo + slot] = True
                     return lo + slot
         raise RuntimeError(f"node {node} has no free core")
@@ -472,6 +504,8 @@ class FreeCoreTracker:
             raise ValueError("core id out of range")
         if self.used[cores].any():
             raise ValueError("core already in use")
+        if self.offline[cores].any():
+            raise ValueError("core is offline")
         self.used[cores] = True
 
     def release_cores(self, cores: np.ndarray) -> None:

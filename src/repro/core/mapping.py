@@ -150,7 +150,7 @@ def drb(jobs: Sequence[AppGraph], cluster: ClusterTopology,
     tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
     for job in jobs:
         # DRB packs each job into the most compact free region (locality first)
-        free = np.where(~tracker.used)[0]
+        free = np.where(tracker.free_mask())[0]
         if free.size < job.n_procs:
             raise RuntimeError("cluster full")
         chosen = free[:job.n_procs]  # compact block of free cores
@@ -286,7 +286,7 @@ def recursive_bisect(jobs: Sequence[AppGraph], cluster: ClusterTopology,
     tracker = tracker if tracker is not None else FreeCoreTracker(cluster)
     sizes = _rb_domains(cluster)
     for job in jobs:
-        free = np.flatnonzero(~tracker.used)
+        free = np.flatnonzero(tracker.free_mask())
         if free.size < job.n_procs:
             raise RuntimeError("cluster full")
         out = np.full(job.n_procs, -1, dtype=np.int64)

@@ -143,9 +143,10 @@ def new_mapping_tpu(jobs, topo: ClusterTopology,
         pool = [j for j in jobs if j.size_class() == size_class]
         for job in _sorted_jobs(pool):
             # pod-level blocked: fewest pods that fit, most-free first
+            free_mask = tracker.free_mask()
             free_per_pod = np.array([
-                int((~tracker.used[p * chips_per_pod:(p + 1) * chips_per_pod]
-                     ).sum()) for p in range(topo.pods)])
+                int(free_mask[p * chips_per_pod:(p + 1) * chips_per_pod]
+                    .sum()) for p in range(topo.pods)])
             order = np.argsort(-free_per_pod, kind="stable")
             chosen: list[int] = []
             need = job.n_procs
@@ -161,7 +162,7 @@ def new_mapping_tpu(jobs, topo: ClusterTopology,
             # blocked assignment inside the chosen pods (logical order
             # preserved -> TP/DP neighbours stay topologically compact)
             cores = np.empty(job.n_procs, dtype=np.int64)
-            free = np.flatnonzero(~tracker.used)
+            free = np.flatnonzero(tracker.free_mask())
             free = free[np.isin(topo.pod_of(free), chosen)]
             cores[:] = free[:job.n_procs]
             # the paper's threshold, applied to pod-crossing endpoints

@@ -4,17 +4,22 @@ Public surface:
   events     — Event / EventQueue discrete-event core
   scheduler  — FleetScheduler, FleetStats, RemapDecision
   traces     — named arrival scenarios (paper tables + serving fleet)
+               and the seeded fault injector (§12)
 """
-from .events import ARRIVAL, DEPARTURE, REMAP, Event, EventQueue
+from .events import (ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL, NODE_RECOVER,
+                     REMAP, Event, EventQueue)
 from .scheduler import (FleetScheduler, FleetStats, RemapDecision, SchedJob,
                         SchedulerInvariantError, projected_level_loads,
                         projected_nic_loads, resolve_strategy)
-from .traces import TRACES, TraceSpec, get_trace
+from .traces import (TRACES, NodeEvent, TraceSpec, fault_trace, get_trace,
+                     reference_fault_trace)
 
 __all__ = [
-    "ARRIVAL", "DEPARTURE", "REMAP", "Event", "EventQueue",
+    "ARRIVAL", "DEPARTURE", "REMAP", "NODE_FAIL", "NODE_RECOVER", "DRAIN",
+    "Event", "EventQueue",
     "FleetScheduler", "FleetStats", "RemapDecision", "SchedJob",
     "SchedulerInvariantError", "projected_level_loads",
     "projected_nic_loads", "resolve_strategy",
     "TRACES", "TraceSpec", "get_trace",
+    "NodeEvent", "fault_trace", "reference_fault_trace",
 ]

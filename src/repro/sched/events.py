@@ -1,10 +1,12 @@
 """Event machinery for the online fleet scheduler.
 
-A deliberately tiny discrete-event core: three event kinds pushed onto a
+A deliberately tiny discrete-event core: six event kinds pushed onto a
 single time-ordered heap. Ties are broken by a monotonically increasing
-sequence number, then by kind priority so that at equal timestamps
-departures free cores *before* arrivals try to claim them and remap
-passes observe a settled fleet.
+sequence number, then by kind priority so that at equal timestamps the
+topology settles first (failures, then recoveries), departures free
+cores *before* arrivals try to claim them, drains mark nodes
+unschedulable before same-instant arrivals, and remap passes observe a
+settled fleet.
 """
 from __future__ import annotations
 
@@ -16,22 +18,32 @@ from typing import Optional
 ARRIVAL = "arrival"
 DEPARTURE = "departure"
 REMAP = "remap"
+NODE_FAIL = "node_fail"
+NODE_RECOVER = "node_recover"
+DRAIN = "drain"
 
-# at equal timestamps: release cores, then admit, then consider remapping
-_KIND_PRIORITY = {DEPARTURE: 0, ARRIVAL: 1, REMAP: 2}
+# at equal timestamps: settle the topology (fail, then recover), release
+# cores, mark draining nodes unschedulable, then admit, then consider
+# remapping.  NODE_FAIL before DEPARTURE means a job departing at the
+# exact failure instant is killed, not credited — the conservative tie.
+_KIND_PRIORITY = {NODE_FAIL: 0, NODE_RECOVER: 1, DEPARTURE: 2,
+                  DRAIN: 3, ARRIVAL: 4, REMAP: 5}
 
 
 @dataclasses.dataclass(frozen=True)
 class Event:
     time: float
-    kind: str            # ARRIVAL | DEPARTURE | REMAP
-    job_id: int = -1     # -1 for REMAP ticks
+    kind: str            # ARRIVAL | DEPARTURE | REMAP | NODE_FAIL | NODE_RECOVER | DRAIN
+    job_id: int = -1     # -1 for REMAP ticks and node events
     epoch: int = 0       # departure re-key generation (DESIGN.md §3)
     # ^ every re-clock that moves a job's departure bumps the job's epoch
     #   and pushes a fresh event; superseded events stay in the heap and
     #   are discarded lazily when their epoch no longer matches the job's.
     #   This replaces the old float-equality stale check, which broke as
     #   soon as a departure was re-derived rather than copied bit-for-bit.
+    node: int = -1       # NODE_FAIL / NODE_RECOVER / DRAIN target
+    deadline: float = 0.0  # DRAIN only: hard-kill time; an event whose
+    #   time == deadline is the deadline enforcement tick itself
 
     def sort_key(self, seq: int) -> tuple:
         return (self.time, _KIND_PRIORITY[self.kind], seq)
@@ -40,22 +52,38 @@ class Event:
         """Compact one-line rendering for traces and flight dumps."""
         if self.kind == REMAP:
             return f"t={self.time:g} remap"
+        if self.kind in (NODE_FAIL, NODE_RECOVER):
+            return f"t={self.time:g} {self.kind} node={self.node}"
+        if self.kind == DRAIN:
+            return (f"t={self.time:g} drain node={self.node}"
+                    f" deadline={self.deadline:g}")
         tail = f" epoch={self.epoch}" if self.kind == DEPARTURE else ""
         return f"t={self.time:g} {self.kind} job={self.job_id}{tail}"
 
 
 class EventQueue:
-    """Min-heap of events ordered by (time, kind priority, insertion seq)."""
+    """Min-heap of events ordered by (time, kind priority, insertion seq).
+
+    Per-kind counts are maintained on push/pop so :meth:`count` is O(1) —
+    the failure-policy code polls pending-departure counts every event,
+    which made the old O(n) heap scan quadratic over a run.  Stale
+    (superseded-epoch) departures are counted until popped, exactly
+    matching the semantics of the scan it replaces.
+    """
 
     def __init__(self) -> None:
         self._heap: list[tuple[tuple, Event]] = []
         self._seq = itertools.count()
+        self._counts: dict[str, int] = {}
 
     def push(self, event: Event) -> None:
         heapq.heappush(self._heap, (event.sort_key(next(self._seq)), event))
+        self._counts[event.kind] = self._counts.get(event.kind, 0) + 1
 
     def pop(self) -> Event:
-        return heapq.heappop(self._heap)[1]
+        event = heapq.heappop(self._heap)[1]
+        self._counts[event.kind] -= 1
+        return event
 
     def peek(self) -> Optional[Event]:
         return self._heap[0][1] if self._heap else None
@@ -67,4 +95,4 @@ class EventQueue:
         return bool(self._heap)
 
     def count(self, kind: str) -> int:
-        return sum(1 for _, e in self._heap if e.kind == kind)
+        return self._counts.get(kind, 0)

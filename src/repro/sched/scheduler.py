@@ -33,6 +33,20 @@ event-driven scheduler (DESIGN.md §3):
   ``sim_backend`` selects the simulator backend for every projection
   (DESIGN.md §8; ``auto`` -> segmented scan on CPU).
 
+* **Failures and maintenance** (DESIGN.md §12): injected ``NODE_FAIL`` /
+  ``NODE_RECOVER`` / ``DRAIN`` events (see ``sched.traces.fault_trace``)
+  drive a failure engine with two job-recovery policies — requeue-restart
+  (kill, roll back to the last checkpoint via
+  ``ckpt.checkpoint.CheckpointCostModel``, re-admit through the FIFO with
+  the restore traffic booked as work debt) and elastic-shrink (shed the
+  dead node's procs with ``ckpt.fault_tolerance.ElasticReMesher`` and
+  re-place the survivors' shrunk CTG) — plus two drain policies:
+  proactive (evacuate the draining node through the remap machinery
+  before the deadline) and kill (let the deadline hard-kill whatever is
+  left). Node liveness is canonical in a sim-clocked
+  ``HeartbeatMonitor``; dead/draining cores leave the schedulable pool
+  through the tracker's ``offline`` mask without touching occupancy.
+
 Determinism: no wall clock, no unseeded randomness — identical traces
 yield identical schedules, which the tests rely on.
 
@@ -54,12 +68,15 @@ from typing import Callable, Iterable, Optional, Sequence, Union
 import numpy as np
 
 from .. import obs
+from ..ckpt.checkpoint import CheckpointCostModel
+from ..ckpt.fault_tolerance import ElasticReMesher, HeartbeatMonitor
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
 from ..core.mapping import STRATEGIES
 from ..core.simulator import SimHandle, resolve_backend
 from ..core.workloads import Arrival
-from .events import ARRIVAL, DEPARTURE, REMAP, Event, EventQueue
+from .events import (ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL, NODE_RECOVER,
+                     REMAP, Event, EventQueue)
 
 MB = 1 << 20
 
@@ -158,9 +175,17 @@ class SchedJob:
     #   contention of the last re-clock (the work rate is 1/sim_finish)
     wait_proj: float = 0.0           # per-job wait projection at last re-clock
     last_clock: float = 0.0          # sim time work was last accrued
+    # -- failure-recovery state (DESIGN.md §12) ----------------------------
+    restart_debt_s: float = 0.0      # restore traffic (s over the NIC)
+    #   pending from a restart/shrink; folded into work_done as debt at
+    #   the job's next re-key, exactly like a migration stall
+    n_restarts: int = 0              # kills survived (requeue or shrink)
+    lost_work_s: float = 0.0         # work discarded by checkpoint rollbacks
 
     @property
     def queue_wait(self) -> float:
+        # for restarted jobs this spans original arrival -> latest
+        # placement, so it includes the pre-kill residency (§12)
         return (self.placed_at - self.arrival) if self.placed_at is not None else 0.0
 
 
@@ -208,6 +233,21 @@ class FleetStats:
     # ^ records behind each sampled statistic, e.g. {"peak_sim_util": 31,
     #   "nic_util": 29, "level.rack": 29} — 0 samples -> the statistic is 0
     sampling_policy: str = "per-mutation"
+    # -- failure / recovery outcomes (DESIGN.md §12) -----------------------
+    goodput: float = 1.0             # useful_core_s / alloc_core_s; 1.0
+    #   when no work was accrued (reclock=False or an empty run)
+    useful_core_s: float = 0.0       # productive core-seconds (work that
+    #   survived to the end — checkpoint rollbacks subtract their losses)
+    alloc_core_s: float = 0.0        # core-seconds jobs held cores
+    lost_work_s: float = 0.0         # job-seconds discarded by rollbacks
+    mttr_mean: float = 0.0           # mean kill -> re-placement latency
+    n_node_failures: int = 0
+    n_node_recoveries: int = 0
+    n_restarts: int = 0              # requeue-restart kills
+    n_shrinks: int = 0               # elastic-shrink survivals
+    n_drains: int = 0                # drain windows begun
+    n_evacuations: int = 0           # jobs migrated off draining nodes
+    n_drain_kills: int = 0           # jobs hard-killed at drain deadlines
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -242,7 +282,11 @@ class FleetScheduler:
                  remap_population: int = 16,
                  remap_rng_seed: int = 0,
                  reclock: bool = True,
-                 recorder: Optional[obs.Recorder] = None):
+                 recorder: Optional[obs.Recorder] = None,
+                 failure_policy: str = "requeue",
+                 drain_policy: str = "proactive",
+                 ckpt_model: Optional[CheckpointCostModel] = None,
+                 elastic_model_size: int = 1):
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
         self._strategy = resolve_strategy(strategy)
@@ -292,6 +336,31 @@ class FleetScheduler:
         # REPRO_TRACE opt-in) — the NULL no-op by default
         self._recorder = recorder
         self._remap_scheduled = False
+        # -- failure engine state (DESIGN.md §12) --------------------------
+        if failure_policy not in ("requeue", "elastic"):
+            raise ValueError(f"unknown failure_policy {failure_policy!r}")
+        if drain_policy not in ("proactive", "kill"):
+            raise ValueError(f"unknown drain_policy {drain_policy!r}")
+        self.failure_policy = failure_policy
+        self.drain_policy = drain_policy
+        self.ckpt = ckpt_model if ckpt_model is not None \
+            else CheckpointCostModel()
+        self.elastic_model_size = max(1, elastic_model_size)
+        # node liveness is canonical here; the sim-time clock (NOT the
+        # wall-clock default) keeps last_seen — and every trace field
+        # derived from it — byte-identical across seeded runs
+        self.monitor = HeartbeatMonitor(cluster.n_nodes,
+                                        deadline_s=float("inf"),
+                                        clock=lambda: self.now)
+        self.draining: dict[int, float] = {}   # node -> hard-kill deadline
+        self._drain_gen: dict[int, int] = {}   # stale-deadline-tick guard
+        self._node_down_at: dict[int, float] = {}
+        self._kill_time: dict[int, float] = {} # job -> eviction time (MTTR)
+        # goodput ledger: productive vs allocated core-seconds, accrued in
+        # _advance_work without touching the per-job clock math (the
+        # no-fault bit-identical guarantee relies on that separation)
+        self._useful_core_s = 0.0
+        self._alloc_core_s = 0.0
 
     @property
     def recorder(self) -> obs.Recorder:
@@ -336,6 +405,10 @@ class FleetScheduler:
         job.placed_at = now
         self.live[job.job_id] = job
         self._last_res = None
+        killed_at = self._kill_time.pop(job.job_id, None)
+        if killed_at is not None:
+            # recovery completes when the restarted job holds cores again
+            self.metrics.histogram("fault.mttr").observe(now - killed_at)
         rec = self.recorder
         if rec.enabled:
             rec.instant("admit", ts=now, track="events", job=job.job_id,
@@ -388,6 +461,31 @@ class FleetScheduler:
         for a in trace:
             self.submit(a.graph, at=a.time)
 
+    def submit_faults(self, faults: Iterable) -> None:
+        """Enqueue injected node events for :meth:`run` (DESIGN.md §12).
+
+        Accepts anything with ``time`` / ``kind`` / ``node`` (and, for
+        DRAIN, ``deadline``) attributes — e.g. the records produced by
+        ``sched.traces.fault_trace``. Requires the re-clocking engine:
+        recovery re-keys every survivor's departure, which the stale
+        clock cannot express.
+        """
+        if not self.reclock:
+            raise ValueError("fault injection requires reclock=True "
+                             "(recovery re-keys departures)")
+        for f in faults:
+            if f.kind not in (NODE_FAIL, NODE_RECOVER, DRAIN):
+                raise ValueError(f"not a node event kind: {f.kind!r}")
+            node = int(f.node)
+            if node < 0 or node >= self.cluster.n_nodes:
+                raise ValueError(f"node {node} out of range")
+            deadline = float(getattr(f, "deadline", 0.0))
+            if f.kind == DRAIN and deadline < f.time:
+                raise ValueError(f"drain deadline {deadline} before start "
+                                 f"{f.time}")
+            self.events.push(Event(time=float(f.time), kind=f.kind,
+                                   node=node, deadline=deadline))
+
     def step(self) -> Optional[Event]:
         """Pop and handle ONE event; ``None`` once the queue is drained.
 
@@ -417,6 +515,12 @@ class FleetScheduler:
             self._handle_arrival(self.jobs[ev.job_id])
         elif ev.kind == DEPARTURE:
             self._handle_departure(ev)
+        elif ev.kind == NODE_FAIL:
+            self._handle_node_fail(ev)
+        elif ev.kind == NODE_RECOVER:
+            self._handle_node_recover(ev)
+        elif ev.kind == DRAIN:
+            self._handle_drain(ev)
         elif ev.kind == REMAP:
             self._remap_scheduled = False
             self._remap_pass()
@@ -460,8 +564,19 @@ class FleetScheduler:
             if dt > 0.0 and job.sim_finish > 0.0:
                 frac = min(dt / job.sim_finish,
                            max(1.0 - job.work_done, 0.0))
+                before = job.work_done
                 job.work_done += frac
                 job.msg_wait += frac * job.wait_proj
+                # goodput ledger (§12): productive seconds are the
+                # POSITIVE work actually gained — paying off migration /
+                # restore debt is machine time, not progress. Pure
+                # side-accounting: the per-job clock math above is
+                # untouched, so no-fault runs stay bit-identical.
+                self._useful_core_s += (
+                    (max(job.work_done, 0.0) - max(before, 0.0))
+                    * job.sim_finish * job.graph.n_procs)
+            if dt > 0.0:
+                self._alloc_core_s += dt * job.graph.n_procs
             job.last_clock = self.now
 
     def _reclock(self, res=None) -> None:
@@ -483,6 +598,13 @@ class FleetScheduler:
         for job in self.live.values():
             job.sim_finish = max(res.job_finish[job.job_id], 1e-9)
             job.wait_proj = res.per_job_wait[job.job_id]
+            if job.restart_debt_s > 0.0:
+                # restore traffic from a restart/shrink stalls the job
+                # exactly like a migration: fold it into work_done as
+                # debt at the first re-key under the new contention
+                # (no-op float-compare when no fault ever touched the job)
+                job.work_done -= job.restart_debt_s / job.sim_finish
+                job.restart_debt_s = 0.0
             departure = self.now \
                 + max(1.0 - job.work_done, 0.0) * job.sim_finish
             if job.departure is not None and abs(departure - job.departure) \
@@ -520,6 +642,27 @@ class FleetScheduler:
             return
         self.depart(ev.job_id, now=self.now)
         # departures free cores — drain the FIFO head while it fits
+        placed_any = self._drain_pending()
+        if self.reclock:
+            # one simulate covers the drained jobs AND the survivors'
+            # speed-up now that the departed job's traffic is gone
+            self._reclock()
+        if self.draining and self.drain_policy == "proactive":
+            # freed cores may unblock a stalled evacuation — retry every
+            # draining node before its deadline hard-kills the leftovers
+            for node in sorted(self.draining):
+                self._evacuate(node)
+        if placed_any:
+            # drain-placements change contention like arrivals do — keep
+            # the periodic remap tick alive (it previously lapsed here)
+            self._maybe_schedule_remap()
+
+    def _drain_pending(self) -> bool:
+        """Admit queued jobs from the FIFO head while they fit; returns
+        whether anything was placed. Callers holding the re-clock engine
+        must :meth:`_reclock` afterwards — the whole drained batch is
+        keyed by one simulate, per-job re-clocks at the same timestamp
+        would only push events the next iteration supersedes."""
         placed_any = False
         while self.pending:
             head = self.jobs[self.pending[0]]
@@ -532,10 +675,6 @@ class FleetScheduler:
                             queue_wait=self.now - head.arrival,
                             depth=len(self.pending))
             if self.reclock:
-                # admit the whole drained batch first; the single
-                # _reclock below keys them all (and the survivors) at
-                # once — per-job re-clocks at the same timestamp would
-                # only push events the next iteration supersedes
                 self.admit(head.graph, now=self.now)
                 head.last_clock = self.now
             else:
@@ -543,14 +682,7 @@ class FleetScheduler:
             self.metrics.gauge("sched.queue_depth").set(len(self.pending),
                                                         self.now)
             placed_any = True
-        if self.reclock:
-            # one simulate covers the drained jobs AND the survivors'
-            # speed-up now that the departed job's traffic is gone
-            self._reclock()
-        if placed_any:
-            # drain-placements change contention like arrivals do — keep
-            # the periodic remap tick alive (it previously lapsed here)
-            self._maybe_schedule_remap()
+        return placed_any
 
     def _place_and_clock(self, job: SchedJob) -> None:
         """Admit + derive departure times from the queueing simulator."""
@@ -571,6 +703,284 @@ class FleetScheduler:
         self._sample_mutation(res)
         self.events.push(Event(time=job.departure, kind=DEPARTURE,
                                job_id=job.job_id, epoch=job.epoch))
+
+    # -- failure engine (DESIGN.md §12) -----------------------------------------
+    def _node_cores(self, node: int) -> np.ndarray:
+        cpn = self.cluster.cores_per_node
+        return np.arange(node * cpn, (node + 1) * cpn, dtype=np.int64)
+
+    def _jobs_on_node(self, node: int) -> list[int]:
+        return sorted(jid for jid, job in self.live.items()
+                      if (self.cluster.node_of(job.cores) == node).any())
+
+    def _handle_node_fail(self, ev: Event) -> None:
+        node = ev.node
+        if not self.monitor.alive[node]:
+            return      # overlapping injector windows — already down
+        self.monitor.mark_dead(node)
+        self._node_down_at[node] = self.now
+        self.draining.pop(node, None)   # a failure overrides a drain
+        self.tracker.set_offline(self._node_cores(node))
+        self.metrics.counter("fault.node_failures").inc()
+        affected = self._jobs_on_node(node)
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("node_fail", track="faults", node=node,
+                        affected=affected,
+                        pending_departures=self.events.count(DEPARTURE))
+        for jid in affected:
+            self._fail_job(jid, reason="node_fail")
+        # killed jobs released their surviving cores — the FIFO head
+        # (including the restarts just queued) may fit right now
+        placed_any = self._drain_pending()
+        self._reclock()
+        if affected or placed_any:
+            self._maybe_schedule_remap()
+
+    def _handle_node_recover(self, ev: Event) -> None:
+        node = ev.node
+        was_draining = self.draining.pop(node, None) is not None
+        if self.monitor.alive[node] and not was_draining:
+            return      # duplicate recover (overlapping injector windows)
+        self.monitor.revive(node)
+        self.tracker.set_online(self._node_cores(node))
+        self.metrics.counter("fault.node_recoveries").inc()
+        down_at = self._node_down_at.pop(node, None)
+        if down_at is not None:
+            self.metrics.histogram("fault.node_downtime_s").observe(
+                self.now - down_at)
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("node_recover", track="faults", node=node,
+                        down_s=(self.now - down_at) if down_at is not None
+                        else 0.0, cancelled_drain=was_draining,
+                        pending_departures=self.events.count(DEPARTURE))
+        placed_any = self._drain_pending()
+        if placed_any:
+            self._reclock()
+            self._maybe_schedule_remap()
+
+    def _handle_drain(self, ev: Event) -> None:
+        node = ev.node
+        if ev.epoch:
+            # the deadline tick we scheduled at drain start; the
+            # generation guard kills ticks whose drain was cancelled by
+            # a failure/recover (and any tick of a superseded drain)
+            if node in self.draining \
+                    and ev.epoch == self._drain_gen.get(node):
+                self._drain_deadline(node)
+            return
+        if node in self.draining or not self.monitor.alive[node]:
+            return      # duplicate start / node already down
+        gen = self._drain_gen.get(node, 0) + 1
+        self._drain_gen[node] = gen
+        self.draining[node] = ev.deadline
+        # draining cores leave the schedulable pool immediately; jobs
+        # already on the node keep running until migrated or killed
+        self.tracker.set_offline(self._node_cores(node))
+        self.metrics.counter("fault.drains").inc()
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("drain_begin", track="faults", node=node,
+                        deadline=ev.deadline, policy=self.drain_policy,
+                        resident=self._jobs_on_node(node),
+                        pending_departures=self.events.count(DEPARTURE))
+        if self.drain_policy == "proactive":
+            self._evacuate(node)
+        if ev.deadline <= ev.time:
+            self._drain_deadline(node)
+        else:
+            self.events.push(Event(time=ev.deadline, kind=DRAIN, node=node,
+                                   deadline=ev.deadline, epoch=gen))
+
+    def _drain_deadline(self, node: int) -> None:
+        """Drain grace expired: hard-kill whatever still holds the node
+        and put it into its maintenance window (NODE_RECOVER ends it)."""
+        del self.draining[node]
+        victims = self._jobs_on_node(node)
+        self.monitor.mark_dead(node)
+        self._node_down_at[node] = self.now
+        self.metrics.counter("fault.drain_kills").inc(len(victims))
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("drain_deadline", track="faults", node=node,
+                        killed=victims)
+        for jid in victims:
+            job = self.live[jid]
+            # deadline kills are always hard restarts — elastic shrink is
+            # a failure response; a drained node's procs are not "dead",
+            # the whole job must vacate
+            self._requeue(job, self._rollback(job), reason="drain_deadline")
+        placed_any = self._drain_pending()
+        self._reclock()
+        if victims or placed_any:
+            self._maybe_schedule_remap()
+
+    def _fail_job(self, jid: int, reason: str) -> None:
+        """One job lost cores to a dead node: roll back to its last
+        checkpoint, then shrink (elastic policy, when possible) or
+        requeue-restart."""
+        job = self.live[jid]
+        kept_work = self._rollback(job)
+        if self.failure_policy == "elastic" \
+                and self._elastic_shrink(job, kept_work):
+            return
+        self._requeue(job, kept_work, reason)
+
+    def _rollback(self, job: SchedJob) -> float:
+        """Checkpoint rollback: books the lost work and returns the work
+        fraction that survives (progress at the last checkpoint)."""
+        progress_s = max(job.work_done, 0.0) * job.sim_finish
+        lost_s = self.ckpt.lost_work(progress_s)
+        job.lost_work_s += lost_s
+        self.metrics.counter("fault.lost_work_s").inc(lost_s)
+        # the goodput ledger credited this work as it accrued — take the
+        # discarded tail back out
+        self._useful_core_s -= lost_s * job.graph.n_procs
+        if job.sim_finish <= 0.0:
+            return 0.0
+        return (progress_s - lost_s) / job.sim_finish
+
+    def _evict(self, jid: int, reason: str) -> SchedJob:
+        """Remove a live job without crediting completion: cores go back
+        to the pool (offline ones stay unschedulable), any in-flight
+        departure event goes stale via the epoch bump."""
+        job = self.live.pop(jid)
+        cores = self.placement.remove(jid)
+        self.tracker.release_cores(cores)
+        job.cores = None
+        job.epoch += 1
+        job.departure = None
+        job.sim_finish = 0.0
+        job.wait_proj = 0.0
+        self._last_res = None
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("evict", track="faults", job=jid, reason=reason)
+        return job
+
+    def _requeue(self, job: SchedJob, kept_work: float, reason: str) -> None:
+        """Requeue-restart: kill the job and re-admit it through the FIFO
+        tail, carrying its checkpointed progress and a restore-traffic
+        work debt (state re-read through the NIC at re-placement)."""
+        self._evict(job.job_id, reason)
+        job.work_done = kept_work
+        job.restart_debt_s = self.ckpt.restore_seconds(
+            job.state_bytes_per_proc * job.graph.n_procs,
+            self.cluster.nic_bw)
+        job.n_restarts += 1
+        self._kill_time[job.job_id] = self.now
+        self.pending.append(job.job_id)
+        self.metrics.counter("fault.restarts").inc()
+        self.metrics.gauge("sched.queue_depth").set(len(self.pending),
+                                                    self.now)
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("requeue_restart", track="faults", job=job.job_id,
+                        reason=reason, kept_work=kept_work,
+                        restore_debt_s=job.restart_debt_s,
+                        depth=len(self.pending))
+
+    def _elastic_shrink(self, job: SchedJob, kept_work: float) -> bool:
+        """Elastic-shrink recovery: shed the dead node's procs and re-place
+        the survivors' shrunk CTG with the admission strategy (the paper's
+        mapper on the degraded cluster). Returns False when the job cannot
+        shrink — no survivors, no power-of-two slice, or the survivors do
+        not fit — and the caller falls back to requeue-restart.
+
+        Modeling choice: ``work_done`` is a fraction of the job, so the
+        checkpointed fraction carries over to the shrunk configuration
+        and the remaining work is re-priced by the next re-clock under
+        the shrunk CTG's contention.
+        """
+        graph = job.graph
+        survivors = np.flatnonzero(
+            self.monitor.alive[self.cluster.node_of(job.cores)])
+        if survivors.size == 0:
+            return False
+        plan = ElasticReMesher(model_size=self.elastic_model_size,
+                               chips_per_host=1).replan(survivors.tolist())
+        usable = plan.data_size * plan.model_size
+        if usable < 1:
+            return False
+        # chips_per_host=1 makes replan's chip list the survivor ranks
+        # themselves; device_order indexes that list (surviving ranks)
+        kept_ranks = survivors[plan.device_order]
+        sub = np.sort(kept_ranks)
+        shrunk = AppGraph(name=f"{graph.name}~{usable}",
+                          L=graph.L[np.ix_(sub, sub)].copy(),
+                          lam=graph.lam[np.ix_(sub, sub)].copy(),
+                          cnt=graph.cnt[np.ix_(sub, sub)].copy(),
+                          job_id=graph.job_id)
+        snap = self.tracker.snapshot()
+        self.tracker.release_cores(job.cores)
+        try:
+            local = self._strategy([shrunk], self.cluster, self.tracker)
+        except RuntimeError:
+            self.tracker.restore(snap)
+            return False
+        new_cores = local.assignments[job.job_id]
+        self.placement.remove(job.job_id)
+        self.placement.assign(job.job_id, new_cores)
+        job.graph = shrunk          # new object: the warm-sim delta path
+        # keys on graph identity, so the swap is a clean remove+add
+        job.cores = new_cores
+        job.placed_at = self.now    # new stint
+        job.epoch += 1              # old departure events are stale
+        job.departure = None
+        job.work_done = kept_work
+        job.restart_debt_s = self.ckpt.restore_seconds(
+            job.state_bytes_per_proc * shrunk.n_procs, self.cluster.nic_bw)
+        job.n_restarts += 1
+        job.last_clock = self.now
+        self._last_res = None
+        self.metrics.counter("fault.shrinks").inc()
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("elastic_shrink", track="faults", job=job.job_id,
+                        procs_from=graph.n_procs, procs_to=usable,
+                        dropped=plan.dropped_chips,
+                        restore_debt_s=job.restart_debt_s)
+        return True
+
+    def _evacuate(self, node: int) -> None:
+        """Proactive drain: migrate jobs off ``node`` before the deadline.
+
+        Each resident job is re-placed by the admission strategy against
+        the free pool (the node's cores are offline, so candidates cannot
+        land back on it) and scored through the same warm
+        ``simulate_batch`` path the remap search uses; the move commits
+        regardless of profitability — the alternative at the deadline is
+        losing the job's uncheckpointed work — with migration bytes
+        booked as work debt through the normal remap bookkeeping. Jobs
+        that do not fit stay put: the evacuation is retried after every
+        departure, and whatever remains at the deadline is hard-killed.
+        """
+        affected = self._jobs_on_node(node)
+        if not affected:
+            return
+        live = self._live_graphs()
+        res = self._last_res
+        if res is None:
+            res = self._sim.simulate(live, self.placement)
+            self._last_res = res
+        for jid in affected:
+            candidates = self._reseed_candidates([jid], 1)
+            if not candidates:
+                continue        # no room yet — retry on the next departure
+            _, entry = self._evaluate_candidates(live, res, candidates)
+            if entry is None:   # pragma: no cover - single candidate scored
+                continue
+            self._record_decision(entry, committed=True)
+            self._commit_remap(entry)
+            self.metrics.counter("fault.evacuations").inc()
+            rec = self.recorder
+            if rec.enabled:
+                rec.instant("drain_evacuate", track="faults", job=jid,
+                            node=node,
+                            deadline=self.draining.get(node, 0.0))
+            live = self._live_graphs()
+            res = self._last_res    # _commit_remap re-clocked from res_new
 
     # -- contention-aware remap -----------------------------------------------
     def _maybe_schedule_remap(self) -> None:
@@ -649,7 +1059,7 @@ class FleetScheduler:
             state = SearchState(
                 self.cluster,
                 {jid: j.cores.copy() for jid, j in self.live.items()},
-                (~self.tracker.used).copy())
+                self.tracker.free_mask())
             for move, nxt in neighbours(self._remap_rng, state,
                                         k - len(candidates), jobs=movable,
                                         allow_cross_job=False, sizes=sizes):
@@ -866,6 +1276,21 @@ class FleetScheduler:
             phantom = int((used & ~self.tracker.used).sum())
             self._invariant(
                 f"tracker drift: {leaked} leaked, {phantom} phantom cores")
+        # failure-mode invariants (§12): nothing lives on a dead node, and
+        # the offline mask is exactly the dead + draining nodes' cores
+        dead = np.flatnonzero(~self.monitor.alive)
+        if dead.size:
+            for jid, job in self.live.items():
+                if np.isin(self.cluster.node_of(job.cores), dead).any():
+                    self._invariant(f"job {jid} placed on dead node")
+        expect_off = np.zeros(self.cluster.n_cores, dtype=bool)
+        for node in dead:
+            expect_off[self._node_cores(node)] = True
+        for node in self.draining:
+            expect_off[self._node_cores(node)] = True
+        if not np.array_equal(self.tracker.offline, expect_off):
+            drift = int((self.tracker.offline ^ expect_off).sum())
+            self._invariant(f"offline mask drift on {drift} cores")
 
     def stats(self) -> FleetStats:
         finished = [j for j in self.jobs.values() if j.departure is not None]
@@ -882,6 +1307,9 @@ class FleetScheduler:
             level = name[len("util.level."):]
             level_p99[level] = s.percentile(99)
             sample_counts[f"level.{level}"] = s.n
+        mttr = self.metrics.histogram("fault.mttr")
+        goodput = (max(self._useful_core_s, 0.0) / self._alloc_core_s
+                   if self._alloc_core_s > 0.0 else 1.0)
         return FleetStats(
             n_jobs=len(self.jobs),
             makespan=max((j.departure for j in finished), default=0.0),
@@ -900,7 +1328,23 @@ class FleetScheduler:
                 "queue_wait": j.queue_wait,
                 "msg_wait": j.msg_wait,
                 "n_migrations": j.n_migrations,
+                "n_restarts": j.n_restarts,
+                "lost_work_s": j.lost_work_s,
             } for j in self.jobs.values()},
             level_p99_util=level_p99,
             sample_counts=sample_counts,
+            goodput=goodput,
+            useful_core_s=self._useful_core_s,
+            alloc_core_s=self._alloc_core_s,
+            lost_work_s=self.metrics.counter("fault.lost_work_s").total,
+            mttr_mean=(sum(mttr.samples) / mttr.n) if mttr.n else 0.0,
+            n_node_failures=self.metrics.counter("fault.node_failures").n,
+            n_node_recoveries=self.metrics.counter(
+                "fault.node_recoveries").n,
+            n_restarts=self.metrics.counter("fault.restarts").n,
+            n_shrinks=self.metrics.counter("fault.shrinks").n,
+            n_drains=self.metrics.counter("fault.drains").n,
+            n_evacuations=self.metrics.counter("fault.evacuations").n,
+            n_drain_kills=int(self.metrics.counter(
+                "fault.drain_kills").total),
         )

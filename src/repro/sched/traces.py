@@ -9,6 +9,13 @@ benchmarks and tests run the same scenario by name:
 * ``serve_fleet`` — a TPU serving fleet: decode/prefill jobs for the
   ``repro.configs`` model zoo arriving Poisson on a 2-pod v5e fleet
   (the ROADMAP's multi-tenant serving scenario).
+
+Fault injection (DESIGN.md §12): :func:`fault_trace` generates a seeded,
+deterministic stream of :class:`NodeEvent` records — per-node exponential
+MTBF failures with exponential repairs, correlated rack-blast failures,
+and scheduled maintenance windows with a drain grace period — to feed
+``FleetScheduler.submit_faults``. :func:`reference_fault_trace` is the
+committed reference scenario the tests and ``fault_bench`` gate on.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from ..core.graphs import AppGraph, ClusterTopology
 from ..core.hierarchy import NetLevel, NetworkHierarchy
 from ..core.workloads import (Arrival, poisson_trace, rack_oversub_mix,
                               table_poisson_trace, npb_poisson_trace)
+from .events import DRAIN, NODE_FAIL, NODE_RECOVER
 
 MB = 1 << 20
 
@@ -138,6 +146,111 @@ def serve_fleet_trace(rate: float = 0.02, n_arrivals: int = 12,
         count_scale=1.0,            # serve graphs carry per-step counts
         state_bytes_per_proc=2e9,   # ~HBM-resident shard per chip
     )
+
+
+# ---------------------------------------------------------------------------
+# Fault injection — seeded node failures, rack blasts, maintenance drains
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NodeEvent:
+    """One injected node-level event for ``FleetScheduler.submit_faults``."""
+
+    time: float
+    kind: str          # NODE_FAIL | NODE_RECOVER | DRAIN
+    node: int
+    deadline: float = 0.0   # DRAIN only: hard-kill time (>= time)
+
+
+def fault_trace(cluster: ClusterTopology, *, horizon: float,
+                node_mtbf: float | None = None, node_mttr: float = 50.0,
+                rack_mtbf: float | None = None, rack_size: int = 4,
+                n_drains: int = 0, drain_grace: float = 20.0,
+                maintenance_s: float = 60.0,
+                seed: int = 0) -> list[NodeEvent]:
+    """Seeded, deterministic fault stream over ``[0, horizon)``.
+
+    Three independent processes share one ``default_rng(seed)`` stream in
+    a fixed generation order (per-node failures in node order, then rack
+    blasts, then maintenance windows), so the same seed always yields the
+    same event list:
+
+    * **per-node failures** — each node fails with exponential
+      inter-failure times of mean ``node_mtbf`` (None disables) and
+      repairs with exponential mean ``node_mttr``;
+    * **rack blasts** — correlated failures: with mean ``rack_mtbf``
+      between blasts (None disables), a uniformly chosen rack of
+      ``rack_size`` consecutive nodes fails at once and repairs together
+      (one shared repair draw — that correlation is the point);
+    * **maintenance windows** — ``n_drains`` DRAIN events at uniform
+      times, each on a uniform node with ``deadline = time +
+      drain_grace``, and the matching NODE_RECOVER at ``deadline +
+      maintenance_s``.
+
+    Overlapping windows are legal (a rack blast can hit an already-dead
+    node); the scheduler treats NODE_FAIL on a dead node and NODE_RECOVER
+    on a live one as idempotent no-ops, last event wins.
+    """
+    rng = np.random.default_rng(seed)
+    out: list[NodeEvent] = []
+    if node_mtbf is not None:
+        for node in range(cluster.n_nodes):
+            t = float(rng.exponential(node_mtbf))
+            while t < horizon:
+                repair = float(rng.exponential(node_mttr))
+                out.append(NodeEvent(time=t, kind=NODE_FAIL, node=node))
+                out.append(NodeEvent(time=t + repair, kind=NODE_RECOVER,
+                                     node=node))
+                t += repair + float(rng.exponential(node_mtbf))
+    if rack_mtbf is not None:
+        n_racks = max(1, cluster.n_nodes // rack_size)
+        t = float(rng.exponential(rack_mtbf))
+        while t < horizon:
+            rack = int(rng.integers(n_racks))
+            repair = float(rng.exponential(node_mttr))
+            for node in range(rack * rack_size,
+                              min((rack + 1) * rack_size, cluster.n_nodes)):
+                out.append(NodeEvent(time=t, kind=NODE_FAIL, node=node))
+                out.append(NodeEvent(time=t + repair, kind=NODE_RECOVER,
+                                     node=node))
+            t += repair + float(rng.exponential(rack_mtbf))
+    for _ in range(n_drains):
+        t = float(rng.uniform(0.0, horizon))
+        node = int(rng.integers(cluster.n_nodes))
+        deadline = t + drain_grace
+        out.append(NodeEvent(time=t, kind=DRAIN, node=node,
+                             deadline=deadline))
+        out.append(NodeEvent(time=deadline + maintenance_s,
+                             kind=NODE_RECOVER, node=node))
+    out.sort(key=lambda e: (e.time, e.node, e.kind))
+    return out
+
+
+def reference_fault_trace(cluster: ClusterTopology,
+                          horizon: float = 45.0) -> list[NodeEvent]:
+    """THE committed reference fault scenario (tests + fault_bench gates).
+
+    Sized for the paper's 16-node cluster over a table-trace run (the
+    default ``table4_poisson`` workload finishes around t=48, so the
+    default horizon keeps the faults inside the busy window): a handful
+    of per-node failures, a rack blast, and two maintenance drains
+    pinned to nodes/times where that workload keeps jobs resident — so
+    the kill drain policy demonstrably loses work at the deadline while
+    the proactive policy has free cores to evacuate into. Changing these
+    constants invalidates the baselines in ``benchmarks/baselines.json``.
+    """
+    events = fault_trace(cluster, horizon=horizon,
+                         node_mtbf=horizon * 4, node_mttr=horizon / 5,
+                         rack_mtbf=horizon, rack_size=4,
+                         n_drains=0, seed=1234)
+    maintenance = horizon / 4
+    for start, node, deadline in ((horizon / 11.25, 3, horizon / 6.9),
+                                  (horizon / 4.8, 4, horizon / 3.75)):
+        events.append(NodeEvent(time=start, kind=DRAIN, node=node,
+                                deadline=deadline))
+        events.append(NodeEvent(time=deadline + maintenance,
+                                kind=NODE_RECOVER, node=node))
+    events.sort(key=lambda e: (e.time, e.node, e.kind))
+    return events
 
 
 TRACES: dict[str, Callable[..., TraceSpec]] = {

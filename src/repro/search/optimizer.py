@@ -148,7 +148,8 @@ def search_placement(jobs: Sequence[AppGraph], cluster: ClusterTopology,
         rec.instant("search_begin", cat=obs.CAT_SEARCH, track="search",
                     seed=seed_name, budget=budget, population=population,
                     anneal=anneal, n_jobs=len(jobs))
-    base_used = (tracker.used.copy() if tracker is not None
+    # offline cores (dead / draining nodes) are as unusable as occupied ones
+    base_used = ((tracker.used | tracker.offline).copy() if tracker is not None
                  else np.zeros(cluster.n_cores, dtype=bool))
     usable = ~base_used
     scale = (objective_scale if objective_scale is not None

@@ -1,0 +1,195 @@
+"""repro.ckpt unit coverage: cost model, re-mesher, heartbeats, manager.
+
+Complements the integration path in test_train_ckpt_serve.py with direct
+contract tests — notably the ElasticReMesher ``device_order`` contract
+(indices into the SURVIVING-device list, even when the planner speaks
+global chip ids) and the checkpoint cost model the fleet scheduler's
+failure engine prices restarts with (DESIGN.md §12).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointCostModel, CheckpointManager,
+                        ElasticReMesher, HeartbeatMonitor, ReMeshResult,
+                        StragglerTracker, load_checkpoint, save_checkpoint)
+
+
+# ---------------------------------------------------------------------------
+# CheckpointCostModel — the scheduler's restart pricing
+# ---------------------------------------------------------------------------
+def test_cost_model_checkpoint_grid():
+    m = CheckpointCostModel(interval_s=30.0)
+    assert m.last_checkpoint(65.0) == 60.0
+    assert m.last_checkpoint(30.0) == 30.0
+    assert m.last_checkpoint(29.9) == 0.0
+    assert m.lost_work(65.0) == pytest.approx(5.0)
+    assert m.lost_work(0.0) == 0.0
+
+
+def test_cost_model_negative_progress_clamps():
+    m = CheckpointCostModel(interval_s=30.0)
+    assert m.last_checkpoint(-5.0) == 0.0
+    assert m.lost_work(-5.0) == 0.0
+
+
+def test_cost_model_continuous_checkpointing():
+    m = CheckpointCostModel(interval_s=0.0)
+    assert m.last_checkpoint(42.5) == 42.5
+    assert m.lost_work(42.5) == 0.0
+
+
+def test_cost_model_restore_seconds():
+    m = CheckpointCostModel()
+    assert m.restore_seconds(2e9, 1e9) == pytest.approx(2.0)
+    assert m.restore_seconds(2e9, 0.0) == 0.0
+    assert m.restore_seconds(2e9, -1.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ElasticReMesher — pow2 shrink + device_order contract
+# ---------------------------------------------------------------------------
+def test_remesh_power_of_two_shrink():
+    rm = ElasticReMesher(model_size=8, chips_per_host=8)
+    res = rm.replan(alive_hosts=[0, 1, 2, 4, 5, 6, 7])     # host 3 died
+    assert isinstance(res, ReMeshResult)
+    assert res.data_size == 4                               # 7 -> pow2 4
+    assert res.model_size == 8
+    assert res.dropped_chips == 7 * 8 - 4 * 8
+    np.testing.assert_array_equal(res.device_order, np.arange(32))
+
+
+def test_remesh_no_loss_when_power_of_two():
+    rm = ElasticReMesher(model_size=4, chips_per_host=8)
+    res = rm.replan(alive_hosts=[0, 1])                     # 16 chips
+    assert res.data_size == 4
+    assert res.dropped_chips == 0
+
+
+def test_remesh_empty_cluster():
+    rm = ElasticReMesher(model_size=4, chips_per_host=8)
+    res = rm.replan(alive_hosts=[])
+    assert res.data_size == 0
+    assert res.dropped_chips == 0
+    assert res.device_order.size == 0
+
+
+def test_remesh_planner_speaks_global_ids_order_indexes_survivors():
+    """device_order must index the surviving-chip list, not global ids."""
+    seen = {}
+
+    def planner(chips):
+        seen["chips"] = chips.copy()
+        return chips[::-1]                                  # reverse order
+
+    rm = ElasticReMesher(model_size=8, chips_per_host=8, planner=planner)
+    res = rm.replan(alive_hosts=[0, 2])                     # host 1 dead
+    survivors = np.concatenate([np.arange(0, 8), np.arange(16, 24)])
+    np.testing.assert_array_equal(seen["chips"], survivors)
+    # order translated back to surviving-list indices: chips[order] is
+    # exactly what the planner returned
+    np.testing.assert_array_equal(survivors[res.device_order],
+                                  survivors[::-1])
+
+
+def test_remesh_planner_must_permute():
+    rm = ElasticReMesher(model_size=8, chips_per_host=8,
+                         planner=lambda chips: np.arange(chips.size))
+    with pytest.raises(ValueError, match="permutation"):
+        rm.replan(alive_hosts=[1, 2])   # planner invents chip ids 0..15
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor — injected clock, no accidental resurrection
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_sweep_declares_dead():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(3, deadline_s=10.0, clock=clk)
+    clk.t = 5.0
+    mon.beat(0)
+    clk.t = 12.0
+    assert mon.sweep() == [1, 2]                # 0 beat recently
+    assert mon.alive_hosts() == [0]
+    clk.t = 16.0
+    assert mon.sweep() == [0]
+
+
+def test_heartbeat_beat_does_not_revive():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(2, deadline_s=10.0, clock=clk)
+    mon.mark_dead(0)
+    clk.t = 1.0
+    mon.beat(0)                                 # late packet, still dead
+    assert not mon.alive[0]
+    mon.revive(0)
+    assert mon.alive[0]
+    assert mon.last_seen[0] == 1.0              # revive stamps the clock
+
+
+def test_heartbeat_uses_injected_clock_only():
+    clk = FakeClock()
+    clk.t = 7.5
+    mon = HeartbeatMonitor(2, deadline_s=1.0, clock=clk)
+    assert (mon.last_seen == 7.5).all()         # init reads the clock too
+
+
+# ---------------------------------------------------------------------------
+# StragglerTracker
+# ---------------------------------------------------------------------------
+def test_straggler_flags_slow_step_without_poisoning_ewma():
+    st = StragglerTracker(slow_factor=2.0, ewma=0.9)
+    assert st.record(0, 1.0) is False           # first sample seeds EWMA
+    assert st.record(1, 1.0) is False
+    ewma_before = st.ewma
+    assert st.record(2, 10.0) is True           # straggler
+    assert st.flagged_steps == [2]
+    assert st.ewma == ewma_before               # slow step excluded
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint save/load + manager (jax-backed pytree round-trip)
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.array([1.5, -2.5], dtype=np.float32)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "ck", "step_00000001.npz")
+    tree = _tree()
+    save_checkpoint(path, tree)
+    back = load_checkpoint(path, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]), tree[k])
+
+
+def test_manager_keeps_last_k_and_restores_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        mgr.save(step, {"w": np.full(4, float(step))}, blocking=True)
+    assert mgr.steps() == [2, 3]                # step 1 pruned
+    assert mgr.latest_step() == 3
+    step, tree = mgr.restore_latest({"w": np.zeros(4)})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.full(4, 3.0))
+
+
+def test_manager_async_save_waits(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(7, _tree())                        # background thread
+    mgr.wait()
+    assert mgr.steps() == [7]
+
+
+def test_manager_empty_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.restore_latest({"w": np.zeros(2)}) == (None, None)
