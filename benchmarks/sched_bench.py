@@ -60,7 +60,8 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
               rate: float | None = None, n_arrivals: int | None = None,
               seed: int = 0, remap_interval: float | None = 5.0,
               util_threshold: float = 0.75, sim_backend: str = "auto",
-              reclock: bool = True) -> dict:
+              reclock: bool = True, admission_window: float = 0.0,
+              cells: int | str = 1) -> dict:
     kwargs = {"seed": seed}
     if rate is not None:
         kwargs["rate"] = rate
@@ -83,7 +84,9 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
             state_bytes_per_proc=spec.state_bytes_per_proc,
             count_scale=spec.count_scale,
             sim_backend=sim_backend,
-            reclock=reclock)
+            reclock=reclock,
+            admission_window=admission_window,
+            cells=cells)
         sched.submit_trace(spec.arrivals)
         t0 = time.perf_counter()
         stats = sched.run()
@@ -120,7 +123,9 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
                    "util_threshold": util_threshold,
                    "count_scale": count_scale,
                    "sim_backend": sim_backend,
-                   "reclock": reclock},
+                   "reclock": reclock,
+                   "admission_window": admission_window,
+                   "cells": cells},
         "strategies": results,
         "comparison": comparison,
     }
@@ -174,6 +179,46 @@ def clock_comparison(trace_name: str, strategy: str = "new", *,
         "wall_ratio": round(ratio, 3),
         "makespan_correction": round(
             out["reclock"]["makespan"] - out["stale"]["makespan"], 6),
+    }
+
+
+def cell_comparison(trace_name: str = "fleet64", strategy: str = "new", *,
+                    n_arrivals: int = 24, seed: int = 0,
+                    cells: int | str = "rack",
+                    admission_window: float = 0.0,
+                    sim_backend: str = "auto") -> dict:
+    """Global scheduler vs cell-sharded fleet on a ≥64-node trace (§13).
+
+    Shards the fleet into cells at ``cells`` granularity (a
+    NetworkHierarchy level name or a node count divisor), each with its
+    own tracker view and warm sim handle; re-clocks stay cell-local
+    unless a job spans cells. Reports the wall-time speedup of the
+    sharded run over the single-cell run — gated ``>= 1`` in
+    ``baselines.json`` (``sched.cell_speedup``).
+    """
+    out: dict[str, dict] = {}
+    for label, n_cells in (("global", 1), ("sharded", cells)):
+        rep = run_trace(trace_name, (strategy,), n_arrivals=n_arrivals,
+                        seed=seed, remap_interval=None,
+                        sim_backend=sim_backend,
+                        admission_window=admission_window, cells=n_cells)
+        row = rep["strategies"][strategy]
+        out[label] = {"wall_time_s": row["wall_time_s"],
+                      "makespan": row["makespan"],
+                      "total_msg_wait": row["total_msg_wait"],
+                      "n_spanning_jobs": row["n_spanning_jobs"],
+                      "n_cell_escalations": row["n_cell_escalations"]}
+    speedup = out["global"]["wall_time_s"] / max(
+        out["sharded"]["wall_time_s"], 1e-9)
+    return {
+        "trace": trace_name,
+        "strategy": strategy,
+        "params": {"seed": seed, "n_arrivals": n_arrivals, "cells": cells,
+                   "admission_window": admission_window,
+                   "sim_backend": sim_backend},
+        "global": out["global"],
+        "sharded": out["sharded"],
+        "speedup": round(speedup, 3),
     }
 
 
@@ -260,6 +305,15 @@ def _print_table(report: dict) -> None:
               f" -> reclock {clk['reclock']['wall_time_s']}s"
               f" (ratio {clk['wall_ratio']}), makespan correction "
               f"{clk['makespan_correction']:+.3f}s", file=sys.stderr)
+    cell = report.get("cells")
+    if cell:
+        print(f"  cells[{cell['trace']}]: global "
+              f"{cell['global']['wall_time_s']}s -> sharded "
+              f"{cell['sharded']['wall_time_s']}s "
+              f"(speedup {cell['speedup']}x, "
+              f"{cell['sharded']['n_spanning_jobs']} spanning, "
+              f"{cell['sharded']['n_cell_escalations']} escalations)",
+              file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -293,6 +347,15 @@ def main(argv=None) -> None:
                          "baseline) instead of re-clocking on every mutation")
     ap.add_argument("--clock-compare", action="store_true",
                     help="also time stale vs re-clocked runs on this trace")
+    ap.add_argument("--admission-window", type=float, default=0.0,
+                    help="joint batched admission window in seconds "
+                         "(0 = sequential FIFO, DESIGN.md §13)")
+    ap.add_argument("--cells", default="1",
+                    help="shard the fleet into cells: a node-count divisor "
+                         "(e.g. 4) or a hierarchy level name (e.g. rack)")
+    ap.add_argument("--cells-compare", action="store_true",
+                    help="also time global vs cell-sharded runs on the "
+                         "fleet64 trace (quick always does)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: short trace + clock gate on the "
                          "acceptance traces, hard assertions")
@@ -303,6 +366,8 @@ def main(argv=None) -> None:
     strategies = (("blocked", "cyclic", "new") if args.quick
                   else tuple(args.strategies))
     remap_interval = None if args.no_remap else args.remap_interval
+    cells: int | str = int(args.cells) if str(args.cells).isdigit() \
+        else args.cells
 
     # disabled-recorder overhead first, before any recorder is installed
     obs_overhead = measure_obs_overhead(seed=args.seed) if args.quick \
@@ -317,7 +382,16 @@ def main(argv=None) -> None:
             rate=args.rate, n_arrivals=n_arrivals, seed=args.seed,
             remap_interval=remap_interval,
             util_threshold=args.util_threshold, sim_backend=args.sim_backend,
-            reclock=not args.stale_clock)
+            reclock=not args.stale_clock,
+            admission_window=args.admission_window, cells=cells)
+        if args.quick or args.cells_compare:
+            # quick gates the canonical rack sharding; --cells-compare
+            # honours the sweep flags (window + cell granularity)
+            report["cells"] = cell_comparison(
+                n_arrivals=24, seed=args.seed, sim_backend=args.sim_backend,
+                **({} if args.quick else
+                   {"cells": cells if cells != 1 else "rack",
+                    "admission_window": args.admission_window}))
         if args.quick or args.clock_compare:
             # quick gates the fixed acceptance traces at their default
             # rates; --clock-compare mirrors exactly the run the user
@@ -332,7 +406,8 @@ def main(argv=None) -> None:
                 same = (t == args.scenario and r == args.rate
                         and n == n_arrivals
                         and "new" in report["strategies"]
-                        and not args.stale_clock)
+                        and not args.stale_clock
+                        and args.admission_window == 0.0 and cells == 1)
                 report["clock"].append(clock_comparison(
                     t, rate=r, n_arrivals=n, seed=args.seed,
                     remap_interval=remap_interval,

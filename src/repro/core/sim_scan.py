@@ -257,6 +257,20 @@ _FLAT_CACHE: OrderedDict[tuple, _WorkloadFlat] = OrderedDict()
 _FLAT_CACHE_SIZE = 8
 
 
+def set_flat_cache_size(n: int) -> None:
+    """Resize the shared flattening cache (entries, LRU).
+
+    The default of 8 covers one scheduler's churn; a cell-sharded fleet
+    (DESIGN.md §13) keeps one warm ``_WorkloadFlat`` per cell alive
+    concurrently, so ``FleetScheduler`` widens the cache to
+    ``2 * n_cells + 4`` at construction. Shrinking evicts LRU entries.
+    """
+    global _FLAT_CACHE_SIZE
+    _FLAT_CACHE_SIZE = max(1, int(n))
+    while len(_FLAT_CACHE) > _FLAT_CACHE_SIZE:
+        _FLAT_CACHE.popitem(last=False)
+
+
 def _delta_steps(prev: _WorkloadFlat, jobs: Sequence[AppGraph]):
     """(removed job_ids, appended jobs) turning ``prev`` into ``jobs``.
 

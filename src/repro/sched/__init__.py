@@ -3,11 +3,13 @@
 Public surface:
   events     — Event / EventQueue discrete-event core
   scheduler  — FleetScheduler, FleetStats, RemapDecision
+  cells      — FleetCell shards + the cells=1 aliasing contract (§13)
   traces     — named arrival scenarios (paper tables + serving fleet)
                and the seeded fault injector (§12)
 """
-from .events import (ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL, NODE_RECOVER,
-                     REMAP, Event, EventQueue)
+from .cells import GLOBAL_CELL, FleetCell, build_cells, derive_cell_nodes
+from .events import (ADMIT, ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL,
+                     NODE_RECOVER, REMAP, Event, EventQueue)
 from .scheduler import (FleetScheduler, FleetStats, RemapDecision, SchedJob,
                         SchedulerInvariantError, projected_level_loads,
                         projected_nic_loads, resolve_strategy)
@@ -15,8 +17,9 @@ from .traces import (TRACES, NodeEvent, TraceSpec, fault_trace, get_trace,
                      reference_fault_trace)
 
 __all__ = [
-    "ARRIVAL", "DEPARTURE", "REMAP", "NODE_FAIL", "NODE_RECOVER", "DRAIN",
-    "Event", "EventQueue",
+    "ADMIT", "ARRIVAL", "DEPARTURE", "REMAP", "NODE_FAIL", "NODE_RECOVER",
+    "DRAIN", "Event", "EventQueue",
+    "GLOBAL_CELL", "FleetCell", "build_cells", "derive_cell_nodes",
     "FleetScheduler", "FleetStats", "RemapDecision", "SchedJob",
     "SchedulerInvariantError", "projected_level_loads",
     "projected_nic_loads", "resolve_strategy",

@@ -1,0 +1,123 @@
+"""Fleet cells — rack/pod-granular shards of the scheduler's state.
+
+A *cell* is a contiguous block of nodes carved out of the cluster's
+:class:`~repro.core.hierarchy.NetworkHierarchy` (DESIGN.md §13). Each
+cell owns
+
+* a **tracker view** — a full-cluster :class:`FreeCoreTracker` whose
+  out-of-cell cores are permanently offline, so the one-shot mapping
+  strategies (which walk ``free_mask()``) place inside the cell without
+  knowing cells exist. In-cell ``used``/``offline`` bits mirror the
+  scheduler's global tracker exactly; ``check_invariants`` proves the
+  per-cell views tile the global tracker.
+* a warm **SimHandle** — per-cell delta workload assembly, so a
+  mutation inside one cell re-simulates only that cell's live set and
+  event-loop throughput scales with cells instead of total live jobs.
+* a cached **last_res** — the cell-local analogue of the scheduler's
+  ``_last_res``, invalidated by any mutation that touches the cell.
+* a running **load** — aggregate communication demand (bytes/s) of the
+  jobs resident in the cell; the cross-cell balancer routes arrivals to
+  the fitting cell with the least projected level-load
+  ``(load + job demand) / uplink capacity``.
+
+With ``cells=1`` the scheduler aliases cell 0's tracker and handle to
+its own global ones, so the sharded code path degenerates to exactly
+the sequential scheduler (the byte-identity contract of DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+from ..core.graphs import ClusterTopology, FreeCoreTracker
+from ..core.simulator import SimHandle
+
+GLOBAL_CELL = -1      # job spans cells: placed globally, escalates reclock
+
+
+@dataclasses.dataclass
+class FleetCell:
+    """One shard of the fleet: node range + tracker view + warm sim."""
+
+    cell_id: int
+    nodes: np.ndarray             # contiguous node ids
+    cores: np.ndarray             # the nodes' core ids
+    tracker: FreeCoreTracker      # full-cluster view, out-of-cell offline
+    sim: SimHandle                # warm per-cell simulation handle
+    uplink_bw: float              # aggregate egress capacity (bytes/s)
+    last_res: object = None       # SimResult for the cell's live set
+    load: float = 0.0             # resident jobs' demand (bytes/s)
+    live: set = dataclasses.field(default_factory=set)   # resident job ids
+
+    def total_free(self) -> int:
+        return self.tracker.total_free()
+
+
+def derive_cell_nodes(cluster: ClusterTopology,
+                      cells: Union[int, str]) -> list[np.ndarray]:
+    """Split the cluster's nodes into cell groups.
+
+    ``cells`` is either a cell count (contiguous equal node blocks — must
+    divide ``n_nodes``) or a hierarchy level name (``"rack"`` / ``"pod"``
+    ...), in which case each level-group becomes one cell.
+    """
+    n_nodes = cluster.n_nodes
+    if isinstance(cells, str):
+        hier = cluster.net_hierarchy()
+        for k, lv in enumerate(hier.levels):
+            if lv.name == cells:
+                nodes_per = max(1, hier.group_cores[k]
+                                // cluster.cores_per_node)
+                break
+        else:
+            known = [lv.name for lv in hier.levels]
+            raise KeyError(f"unknown hierarchy level {cells!r}; "
+                           f"known: {known}")
+        n_cells = -(-n_nodes // nodes_per)
+    else:
+        n_cells = int(cells)
+        if n_cells < 1:
+            raise ValueError(f"cells must be >= 1, got {n_cells}")
+        if n_nodes % n_cells:
+            raise ValueError(f"cells={n_cells} does not divide "
+                             f"{n_nodes} nodes evenly")
+        nodes_per = n_nodes // n_cells
+    groups = [np.arange(i * nodes_per, min((i + 1) * nodes_per, n_nodes),
+                        dtype=np.int64) for i in range(n_cells)]
+    return [g for g in groups if g.size]
+
+
+def build_cells(cluster: ClusterTopology, cells: Union[int, str], *,
+                count_scale: float, backend: str,
+                global_tracker: Optional[FreeCoreTracker] = None,
+                global_sim: Optional[SimHandle] = None) -> list[FleetCell]:
+    """Construct the cell shards (DESIGN.md §13).
+
+    A single cell aliases the scheduler's global tracker and SimHandle —
+    the byte-identity guarantee that ``cells=1`` IS the sequential
+    scheduler. Multi-cell trackers are fresh full-cluster views with
+    every out-of-cell core marked offline.
+    """
+    groups = derive_cell_nodes(cluster, cells)
+    cpn = cluster.cores_per_node
+    out: list[FleetCell] = []
+    single = len(groups) == 1
+    for cid, nodes in enumerate(groups):
+        cores = (nodes[:, None] * cpn + np.arange(cpn)).reshape(-1)
+        if single and global_tracker is not None:
+            tracker = global_tracker
+            sim = global_sim if global_sim is not None else SimHandle(
+                cluster, count_scale=count_scale, backend=backend)
+        else:
+            tracker = FreeCoreTracker(cluster)
+            outside = np.ones(cluster.n_cores, dtype=bool)
+            outside[cores] = False
+            tracker.set_offline(np.flatnonzero(outside))
+            sim = SimHandle(cluster, count_scale=count_scale,
+                            backend=backend)
+        out.append(FleetCell(cell_id=cid, nodes=nodes, cores=cores,
+                             tracker=tracker, sim=sim,
+                             uplink_bw=float(nodes.size) * cluster.nic_bw))
+    return out

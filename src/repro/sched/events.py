@@ -1,12 +1,13 @@
 """Event machinery for the online fleet scheduler.
 
-A deliberately tiny discrete-event core: six event kinds pushed onto a
+A deliberately tiny discrete-event core: seven event kinds pushed onto a
 single time-ordered heap. Ties are broken by a monotonically increasing
 sequence number, then by kind priority so that at equal timestamps the
 topology settles first (failures, then recoveries), departures free
 cores *before* arrivals try to claim them, drains mark nodes
-unschedulable before same-instant arrivals, and remap passes observe a
-settled fleet.
+unschedulable before same-instant arrivals, admission-window closes
+observe every same-instant arrival (joint batches never miss the
+arrival that opened them), and remap passes observe a settled fleet.
 """
 from __future__ import annotations
 
@@ -21,13 +22,16 @@ REMAP = "remap"
 NODE_FAIL = "node_fail"
 NODE_RECOVER = "node_recover"
 DRAIN = "drain"
+ADMIT = "admit"          # admission-window close: place the batch jointly
 
 # at equal timestamps: settle the topology (fail, then recover), release
 # cores, mark draining nodes unschedulable, then admit, then consider
 # remapping.  NODE_FAIL before DEPARTURE means a job departing at the
 # exact failure instant is killed, not credited — the conservative tie.
+# ADMIT after ARRIVAL so a window closing exactly when a job arrives
+# still sees that job in the batch.
 _KIND_PRIORITY = {NODE_FAIL: 0, NODE_RECOVER: 1, DEPARTURE: 2,
-                  DRAIN: 3, ARRIVAL: 4, REMAP: 5}
+                  DRAIN: 3, ARRIVAL: 4, ADMIT: 5, REMAP: 6}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +54,8 @@ class Event:
 
     def describe(self) -> str:
         """Compact one-line rendering for traces and flight dumps."""
-        if self.kind == REMAP:
-            return f"t={self.time:g} remap"
+        if self.kind in (REMAP, ADMIT):
+            return f"t={self.time:g} {self.kind}"
         if self.kind in (NODE_FAIL, NODE_RECOVER):
             return f"t={self.time:g} {self.kind} node={self.node}"
         if self.kind == DRAIN:

@@ -33,6 +33,24 @@ event-driven scheduler (DESIGN.md §3):
   ``sim_backend`` selects the simulator backend for every projection
   (DESIGN.md §8; ``auto`` -> segmented scan on CPU).
 
+* **Joint batched admission** (DESIGN.md §13): with ``admission_window``
+  set, arrivals are collected for up to that many sim-seconds (plus the
+  FIFO backlog that fits, bounded look-ahead) and placed as ONE batch —
+  K joint placements (portfolio seeds × per-job strategy assignments ×
+  search moves over the whole batch, ``repro.search.joint``) scored in a
+  single warm ``simulate_batch`` against the full live set, so admission
+  finally sees cross-job contention instead of scoring each arrival in
+  isolation. ``admission_window=0`` (the default) keeps the sequential
+  FIFO path byte-identical to the historical scheduler.
+
+* **Fleet cells** (DESIGN.md §13): ``cells=N`` (or a hierarchy level
+  name like ``"rack"``) shards the fleet into node-contiguous cells,
+  each with its own ``FreeCoreTracker`` view, warm ``SimHandle`` and
+  cell-local re-clocks; a thin balancer routes arrivals to the fitting
+  cell with the least projected level-load and only escalates to a
+  global re-simulate while a job spans cells. ``cells=1`` (the default)
+  aliases cell 0 to the global tracker/handle — the sequential path.
+
 * **Failures and maintenance** (DESIGN.md §12): injected ``NODE_FAIL`` /
   ``NODE_RECOVER`` / ``DRAIN`` events (see ``sched.traces.fault_trace``)
   drive a failure engine with two job-recovery policies — requeue-restart
@@ -63,6 +81,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
+from collections import deque
 from typing import Callable, Iterable, Optional, Sequence, Union
 
 import numpy as np
@@ -72,11 +91,12 @@ from ..ckpt.checkpoint import CheckpointCostModel
 from ..ckpt.fault_tolerance import ElasticReMesher, HeartbeatMonitor
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
-from ..core.mapping import STRATEGIES
+from ..core.mapping import ONE_SHOT_STRATEGIES, STRATEGIES
 from ..core.simulator import SimHandle, resolve_backend
 from ..core.workloads import Arrival
-from .events import (ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL, NODE_RECOVER,
-                     REMAP, Event, EventQueue)
+from .cells import GLOBAL_CELL, FleetCell, build_cells
+from .events import (ADMIT, ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL,
+                     NODE_RECOVER, REMAP, Event, EventQueue)
 
 MB = 1 << 20
 
@@ -248,6 +268,14 @@ class FleetStats:
     n_drains: int = 0                # drain windows begun
     n_evacuations: int = 0           # jobs migrated off draining nodes
     n_drain_kills: int = 0           # jobs hard-killed at drain deadlines
+    # -- joint admission / cells (DESIGN.md §13) ---------------------------
+    hol_blocked_core_s: float = 0.0  # free core-seconds wasted while the
+    #   FIFO head did not fit but a later queued job would have (HOL
+    #   blocking actually costing capacity)
+    n_joint_batches: int = 0         # window/backlog batches placed jointly
+    n_joint_admitted: int = 0        # jobs admitted through joint batches
+    n_spanning_jobs: int = 0         # placements that crossed cell borders
+    n_cell_escalations: int = 0      # re-clocks escalated cell -> global
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -286,7 +314,12 @@ class FleetScheduler:
                  failure_policy: str = "requeue",
                  drain_policy: str = "proactive",
                  ckpt_model: Optional[CheckpointCostModel] = None,
-                 elastic_model_size: int = 1):
+                 elastic_model_size: int = 1,
+                 admission_window: float = 0.0,
+                 admission_k: int = 24,
+                 admission_lookahead: int = 8,
+                 admission_rng_seed: int = 0,
+                 cells: Union[int, str] = 1):
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
         self._strategy = resolve_strategy(strategy)
@@ -320,7 +353,11 @@ class FleetScheduler:
         self.now = 0.0
         self.live: dict[int, SchedJob] = {}
         self.done: dict[int, SchedJob] = {}
-        self.pending: list[int] = []          # FIFO of queued job_ids
+        # FIFO of queued job_ids; deque so the per-event head drain is
+        # O(1) instead of list.pop(0)'s O(n) shift. Requeue-restarts
+        # append at the tail (same as fresh queued arrivals), batch
+        # admission re-queues non-fitting jobs in place, preserving order
+        self.pending: deque[int] = deque()
         self.jobs: dict[int, SchedJob] = {}   # every job ever submitted
         self.events = EventQueue()
         self._arrivals_pending = 0    # un-popped ARRIVAL events; counted
@@ -361,6 +398,46 @@ class FleetScheduler:
         # no-fault bit-identical guarantee relies on that separation)
         self._useful_core_s = 0.0
         self._alloc_core_s = 0.0
+        # -- joint batched admission (DESIGN.md §13) -----------------------
+        self.admission_window = float(admission_window)
+        if self.admission_window < 0.0:
+            raise ValueError("admission_window must be >= 0")
+        if self.admission_window > 0.0 and not reclock:
+            raise ValueError("admission_window requires reclock=True "
+                             "(batch keying re-keys the live set)")
+        self.admission_k = max(1, admission_k)
+        self.admission_lookahead = max(1, admission_lookahead)
+        self._admission_rng = np.random.default_rng(admission_rng_seed)
+        self._admit_scheduled = False   # an ADMIT window-close is in flight
+        # head-of-line accounting (free core-seconds wasted while the FIFO
+        # head blocked a later queued job that would have fit)
+        self._hol_since: Optional[float] = None
+        self._hol_free = 0
+        # incremental node -> resident job-ids index; replaces the
+        # _jobs_on_node linear scan over the live set (updated on every
+        # admit / evict / depart / remap-commit / shrink, validated by
+        # check_invariants against a fresh scan)
+        self._node_jobs: list[set] = [set() for _ in range(cluster.n_nodes)]
+        # -- fleet cells (DESIGN.md §13) -----------------------------------
+        self.cells: list[FleetCell] = build_cells(
+            cluster, cells, count_scale=count_scale,
+            backend=self.sim_backend, global_tracker=self.tracker,
+            global_sim=self._sim)
+        self.n_cells = len(self.cells)
+        self._job_cell: dict[int, int] = {}   # live job -> cell (or GLOBAL)
+        self._n_spanning = 0                  # live jobs crossing cells
+        self._dirty_cells: set = set()        # cells touched since reclock
+        if self.n_cells > 1:
+            if not reclock:
+                raise ValueError("cells > 1 requires reclock=True "
+                                 "(cell-local re-clocks)")
+            # one warm flat per cell handle plus the global one must
+            # coexist in the flat-assembly cache or warm starts thrash
+            from ..core import sim_scan
+            sim_scan.set_flat_cache_size(2 * self.n_cells + 4)
+            self._node_cell = np.empty(cluster.n_nodes, dtype=np.int64)
+            for cell in self.cells:
+                self._node_cell[cell.nodes] = cell.cell_id
 
     @property
     def recorder(self) -> obs.Recorder:
@@ -374,13 +451,127 @@ class FleetScheduler:
         the historical attribute."""
         return self.metrics.histogram("sched.peak_sim_util").samples
 
+    # -- cell views and the node->jobs index (DESIGN.md §13) -----------------
+    def _index_add(self, jid: int, cores: np.ndarray) -> None:
+        for node in np.unique(self.cluster.node_of(cores)):
+            self._node_jobs[int(node)].add(jid)
+
+    def _index_remove(self, jid: int, cores: np.ndarray) -> None:
+        for node in np.unique(self.cluster.node_of(cores)):
+            self._node_jobs[int(node)].discard(jid)
+
+    def _cells_of_cores(self, cores: np.ndarray) -> np.ndarray:
+        return np.unique(self._node_cell[self.cluster.node_of(cores)])
+
+    def _mark_dirty(self, cores: np.ndarray) -> None:
+        """A mutation touched these cores: invalidate the owning cells'
+        cached results and queue them for the next fleet re-clock."""
+        if self.n_cells == 1:
+            return
+        for cid in self._cells_of_cores(cores):
+            self.cells[cid].last_res = None
+            self._dirty_cells.add(int(cid))
+
+    def _cell_claim(self, cores: np.ndarray,
+                    settled: Optional[FreeCoreTracker] = None) -> None:
+        """Mirror a core claim into every overlapping cell view (no-op for
+        the single-cell alias). ``settled`` names a tracker the strategy
+        already claimed on, skipped here."""
+        if self.n_cells == 1:
+            return
+        node_ids = self.cluster.node_of(cores)
+        for cid in np.unique(self._node_cell[node_ids]):
+            cell = self.cells[cid]
+            if cell.tracker is settled:
+                continue
+            cell.tracker.take_cores(cores[self._node_cell[node_ids] == cid])
+
+    def _cell_release(self, cores: np.ndarray) -> None:
+        if self.n_cells == 1:
+            return
+        node_ids = self.cluster.node_of(cores)
+        for cid in np.unique(self._node_cell[node_ids]):
+            self.cells[cid].tracker.release_cores(
+                cores[self._node_cell[node_ids] == cid])
+
+    def _cell_set_offline(self, node: int) -> None:
+        if self.n_cells == 1:
+            return
+        cell = self.cells[int(self._node_cell[node])]
+        cell.tracker.set_offline(self._node_cores(node))
+        cell.last_res = None
+        self._dirty_cells.add(cell.cell_id)
+
+    def _cell_set_online(self, node: int) -> None:
+        if self.n_cells == 1:
+            return
+        cell = self.cells[int(self._node_cell[node])]
+        cell.tracker.set_online(self._node_cores(node))
+        cell.last_res = None
+        self._dirty_cells.add(cell.cell_id)
+
+    def _bind_job_cell(self, jid: int, cores: np.ndarray,
+                       graph: AppGraph) -> None:
+        """Record which cell a placement landed in (GLOBAL_CELL when it
+        spans cells) and book its demand into the balancer's load."""
+        if self.n_cells == 1:
+            return
+        cids = self._cells_of_cores(cores)
+        if cids.size > 1:
+            self._job_cell[jid] = GLOBAL_CELL
+            self._n_spanning += 1
+            self.metrics.counter("sched.spanning_jobs").inc()
+            self._dirty_cells.add(GLOBAL_CELL)
+        else:
+            cell = self.cells[int(cids[0])]
+            self._job_cell[jid] = cell.cell_id
+            cell.live.add(jid)
+            cell.load += float(graph.demand.sum())
+        self._mark_dirty(cores)
+
+    def _unbind_job_cell(self, jid: int, cores: np.ndarray,
+                         graph: AppGraph) -> None:
+        if self.n_cells == 1:
+            return
+        cid = self._job_cell.pop(jid)
+        if cid == GLOBAL_CELL:
+            self._n_spanning -= 1
+        else:
+            cell = self.cells[cid]
+            cell.live.discard(jid)
+            cell.load -= float(graph.demand.sum())
+        self._mark_dirty(cores)
+
+    def _route_cell(self, graph: AppGraph,
+                    remaining: Optional[dict] = None) -> Optional[FleetCell]:
+        """Balancer: the fitting cell with least projected level-load
+        ``(resident demand + job demand) / uplink capacity``; ``None``
+        when no single cell fits (the job will span cells)."""
+        procs = graph.n_procs
+        demand = float(graph.demand.sum())
+        best: Optional[FleetCell] = None
+        best_score = 0.0
+        for cell in self.cells:
+            free = remaining[cell.cell_id] if remaining is not None \
+                else cell.total_free()
+            if free < procs:
+                continue
+            score = (cell.load + demand) / cell.uplink_bw
+            if best is None or score < best_score:
+                best, best_score = cell, score
+        return best
+
     # -- low-level fleet mutations (immediate) -------------------------------
     def admit(self, graph: AppGraph, now: Optional[float] = None,
-              state_bytes_per_proc: Optional[float] = None) -> SchedJob:
+              state_bytes_per_proc: Optional[float] = None, *,
+              cores: Optional[np.ndarray] = None,
+              cell: Optional[FleetCell] = None) -> SchedJob:
         """Place one job right now against the fragmented free pool.
 
         Raises ``RuntimeError`` if the job does not fit — callers that want
-        queueing use :meth:`submit` + :meth:`run`.
+        queueing use :meth:`submit` + :meth:`run`. ``cores`` commits an
+        externally chosen placement (the joint admission batch);
+        ``cell`` pins the placement to one cell's tracker view.
         """
         now = self.now if now is None else now
         if graph.n_procs > self.cluster.n_cores:
@@ -398,12 +589,38 @@ class FleetScheduler:
             self.jobs[job.job_id] = job
         if job.job_id in self.live:
             raise ValueError(f"job {job.job_id} already live")
-        local = self._strategy([graph], self.cluster, self.tracker)
-        cores = local.assignments[graph.job_id]
+        if cores is not None:
+            # joint admission chose the placement; claim it everywhere
+            self.tracker.take_cores(cores)
+            self._cell_claim(cores)
+        elif self.n_cells > 1:
+            if cell is None:
+                cell = self._route_cell(graph)
+            if cell is not None:
+                # in-cell placement: the strategy claims the cell view,
+                # mirror into the global tracker
+                try:
+                    local = self._strategy([graph], self.cluster,
+                                           cell.tracker)
+                except RuntimeError:
+                    cell = None     # fragmented cell — fall back to global
+            if cell is not None:
+                cores = local.assignments[graph.job_id]
+                self.tracker.take_cores(cores)
+            else:
+                # no single cell fits: place globally (spanning job)
+                local = self._strategy([graph], self.cluster, self.tracker)
+                cores = local.assignments[graph.job_id]
+                self._cell_claim(cores)
+        else:
+            local = self._strategy([graph], self.cluster, self.tracker)
+            cores = local.assignments[graph.job_id]
         self.placement.assign(job.job_id, cores)
         job.cores = cores
         job.placed_at = now
         self.live[job.job_id] = job
+        self._index_add(job.job_id, cores)
+        self._bind_job_cell(job.job_id, cores, graph)
         self._last_res = None
         killed_at = self._kill_time.pop(job.job_id, None)
         if killed_at is not None:
@@ -425,6 +642,9 @@ class FleetScheduler:
             raise KeyError(f"job {job_id} is not live")
         cores = self.placement.remove(job_id)
         self.tracker.release_cores(cores)
+        self._cell_release(cores)
+        self._index_remove(job_id, cores)
+        self._unbind_job_cell(job_id, cores, job.graph)
         job.departure = now if job.departure is None else job.departure
         self.done[job_id] = job
         self._last_res = None
@@ -521,6 +741,11 @@ class FleetScheduler:
             self._handle_node_recover(ev)
         elif ev.kind == DRAIN:
             self._handle_drain(ev)
+        elif ev.kind == ADMIT:
+            self._admit_scheduled = False
+            if self._admit_batch():
+                self._reclock_fleet()
+                self._maybe_schedule_remap()
         elif ev.kind == REMAP:
             self._remap_scheduled = False
             self._remap_pass()
@@ -595,7 +820,16 @@ class FleetScheduler:
             res = self._sim.simulate(self._live_graphs(), self.placement)
         self._last_res = res
         self._sample_mutation(res)
-        for job in self.live.values():
+        self._rekey_jobs(self.live.values(), res)
+        if self.n_cells > 1:
+            # a global re-simulate covers every cell: their cached
+            # results are superseded and nothing is left dirty
+            for cell in self.cells:
+                cell.last_res = None
+            self._dirty_cells.clear()
+
+    def _rekey_jobs(self, jobs: Iterable[SchedJob], res) -> None:
+        for job in jobs:
             job.sim_finish = max(res.job_finish[job.job_id], 1e-9)
             job.wait_proj = res.per_job_wait[job.job_id]
             if job.restart_debt_s > 0.0:
@@ -615,12 +849,99 @@ class FleetScheduler:
             self.events.push(Event(time=departure, kind=DEPARTURE,
                                    job_id=job.job_id, epoch=job.epoch))
 
+    def _reclock_fleet(self) -> None:
+        """Cell-aware re-clock dispatch (§13): single-cell fleets re-clock
+        globally (the historical path, bit-for-bit); sharded fleets
+        re-simulate only the cells dirtied since the last re-clock,
+        escalating to one global re-simulate while any live job spans
+        cells (its contention couples the cells it touches)."""
+        if self.n_cells == 1:
+            self._reclock()
+            return
+        dirty = self._dirty_cells
+        self._dirty_cells = set()
+        if not dirty:
+            return
+        if self._n_spanning or GLOBAL_CELL in dirty:
+            self.metrics.counter("sched.cell_escalations").inc()
+            self._reclock()
+            return
+        for cid in sorted(dirty):
+            self._reclock_cell(self.cells[cid])
+
+    def _reclock_cell(self, cell: FleetCell, res=None) -> None:
+        """Re-key one cell's resident jobs from the cell's warm handle.
+
+        The cell-local simulate sees exactly the cell's live set — jobs
+        in other cells share no links with it (placements are node-
+        disjoint and cell-contained), so the restriction is exact, not
+        an approximation."""
+        jobs = [self.live[jid] for jid in sorted(cell.live)
+                if jid in self.live]
+        if not jobs:
+            cell.last_res = None
+            return
+        if res is None:
+            res = cell.sim.simulate([j.graph for j in jobs], self.placement)
+        cell.last_res = res
+        self._sample_mutation(res)
+        self._rekey_jobs(jobs, res)
+
     # -- event handlers ----------------------------------------------------------
     def _handle_arrival(self, job: SchedJob) -> None:
         rec = self.recorder
         if rec.enabled:
             rec.instant("arrive", track="events", job=job.job_id,
                         job_name=job.graph.name, procs=job.graph.n_procs)
+        if self.admission_window > 0.0:
+            # joint batched admission (§13): hold the arrival until the
+            # window closes, then place the whole batch at once.
+            # Batching only pays when placements interact — on an
+            # uncontended fleet with an empty queue the arrival is
+            # placed immediately (holding it would cost latency and
+            # buy nothing the joint score could see). A search strategy
+            # never places its own bypass: below the contention
+            # threshold its projected edge is noise (the same reason
+            # the batch chooser trusts candidate 0 there), so the
+            # bypass uses the robust one-shot mapper instead
+            res = self._last_res
+            if not self.pending and res is not None \
+                    and res.max_server_utilisation < self.util_threshold \
+                    and job.graph.n_procs <= self.tracker.total_free():
+                if self.strategy_name in ONE_SHOT_STRATEGIES:
+                    self._place_and_clock(job)
+                    self._maybe_schedule_remap()
+                    return
+                if self.n_cells == 1:
+                    from ..search.joint import joint_candidates
+                    cands = joint_candidates(
+                        [job.graph], self.cluster, self.tracker.free_mask(),
+                        self._admission_rng, 1, sizes=self._domain_sizes())
+                    if cands:
+                        self.admit(job.graph, now=self.now,
+                                   cores=cands[0][job.job_id])
+                        job.last_clock = self.now
+                        self._reclock_fleet()
+                        self._maybe_schedule_remap()
+                        return
+            self.pending.append(job.job_id)
+            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
+                                                        self.now)
+            if rec.enabled:
+                rec.instant("queue", track="events", job=job.job_id,
+                            depth=len(self.pending))
+            if not self._admit_scheduled:
+                self.events.push(Event(time=self.now + self.admission_window,
+                                       kind=ADMIT))
+                self._admit_scheduled = True
+            # anchor the remap cadence at ARRIVAL time, exactly where the
+            # sequential path anchors it (place-on-arrival then schedule):
+            # otherwise the admission hold shifts every downstream remap
+            # tick by the window, and tick-vs-departure races make the
+            # windowed fleet see a systematically different free pool
+            self._maybe_schedule_remap()
+            self._update_hol()
+            return
         # strict FIFO: while anyone is queued, later arrivals queue behind
         # them (head-of-line blocking) instead of jumping ahead
         if self.pending or job.graph.n_procs > self.tracker.total_free():
@@ -630,6 +951,7 @@ class FleetScheduler:
             if rec.enabled:
                 rec.instant("queue", track="events", job=job.job_id,
                             depth=len(self.pending))
+            self._update_hol()
             return
         self._place_and_clock(job)
         self._maybe_schedule_remap()
@@ -646,7 +968,7 @@ class FleetScheduler:
         if self.reclock:
             # one simulate covers the drained jobs AND the survivors'
             # speed-up now that the departed job's traffic is gone
-            self._reclock()
+            self._reclock_fleet()
         if self.draining and self.drain_policy == "proactive":
             # freed cores may unblock a stalled evacuation — retry every
             # draining node before its deadline hard-kills the leftovers
@@ -662,13 +984,19 @@ class FleetScheduler:
         whether anything was placed. Callers holding the re-clock engine
         must :meth:`_reclock` afterwards — the whole drained batch is
         keyed by one simulate, per-job re-clocks at the same timestamp
-        would only push events the next iteration supersedes."""
+        would only push events the next iteration supersedes.
+
+        With an admission window configured, capacity events route the
+        backlog through :meth:`_admit_batch` instead — requeued restarts
+        and freed cores re-enter the joint batched path (§13)."""
+        if self.admission_window > 0.0:
+            return self._admit_batch()
         placed_any = False
         while self.pending:
             head = self.jobs[self.pending[0]]
             if head.graph.n_procs > self.tracker.total_free():
                 break
-            self.pending.pop(0)
+            self.pending.popleft()
             rec = self.recorder
             if rec.enabled:
                 rec.instant("queue_drain", track="events", job=head.job_id,
@@ -682,6 +1010,7 @@ class FleetScheduler:
             self.metrics.gauge("sched.queue_depth").set(len(self.pending),
                                                         self.now)
             placed_any = True
+        self._update_hol()
         return placed_any
 
     def _place_and_clock(self, job: SchedJob) -> None:
@@ -691,7 +1020,7 @@ class FleetScheduler:
         if self.reclock:
             # one warm simulate keys the new job AND re-keys every other
             # live job under the arrival's added contention
-            self._reclock()
+            self._reclock_fleet()
             return
         # stale-clock baseline: key this job once, never revisit the rest
         res = self._sim.simulate(self._live_graphs(), self.placement)
@@ -704,14 +1033,195 @@ class FleetScheduler:
         self.events.push(Event(time=job.departure, kind=DEPARTURE,
                                job_id=job.job_id, epoch=job.epoch))
 
+    # -- joint batched admission (DESIGN.md §13) --------------------------------
+    def _domain_sizes(self):
+        if not hasattr(self, "_domain_sizes_cache"):
+            from ..search.moves import domain_sizes
+            self._domain_sizes_cache = domain_sizes(self.cluster)
+        return self._domain_sizes_cache
+
+    def _select_batch(self) -> list[SchedJob]:
+        """The admission batch: the FIFO prefix plus bounded look-ahead
+        backfill — scan at most ``admission_lookahead`` queued jobs and
+        take every one that still fits the remaining free budget. A job
+        is only ever skipped because it does not fit, so backfill cannot
+        starve the head (it keeps its budget claim)."""
+        budget = self.tracker.total_free()
+        batch: list[SchedJob] = []
+        for jid in list(self.pending)[:self.admission_lookahead]:
+            job = self.jobs[jid]
+            if job.graph.n_procs <= budget:
+                batch.append(job)
+                budget -= job.graph.n_procs
+        return batch
+
+    def _admit_batch(self) -> bool:
+        """Place the admission batch jointly (§13): route jobs to cells,
+        generate K joint placements per cell group and commit the best
+        by one warm ``simulate_batch`` against the full live set. Jobs
+        whose group does not fit stay queued (in order) and retry at the
+        next capacity event or window close. Returns whether anything
+        was placed; the caller re-clocks."""
+        batch = self._select_batch()
+        if not batch:
+            self._update_hol()
+            return False
+        self.metrics.counter("sched.joint_batches").inc()
+        placed: set = set()
+        if self.n_cells == 1:
+            placed |= self._place_batch_jointly(None, batch)
+        else:
+            # route with decremented budgets so one cell is never handed
+            # more batch jobs than it has free cores
+            remaining = {c.cell_id: c.total_free() for c in self.cells}
+            groups: dict[int, list[SchedJob]] = {}
+            for job in batch:
+                cell = self._route_cell(job.graph, remaining)
+                cid = GLOBAL_CELL if cell is None else cell.cell_id
+                if cell is not None:
+                    remaining[cid] -= job.graph.n_procs
+                groups.setdefault(cid, []).append(job)
+            # spanning placements first (GLOBAL_CELL sorts lowest): they
+            # claim cores across cells, and each cell group re-checks
+            # fit when its own candidates are generated
+            for cid in sorted(groups):
+                jobs = groups[cid]
+                if cid == GLOBAL_CELL:
+                    for job in jobs:
+                        try:
+                            self.admit(job.graph, now=self.now)
+                        except RuntimeError:
+                            continue    # stays queued — retry later
+                        job.last_clock = self.now
+                        placed.add(job.job_id)
+                else:
+                    placed |= self._place_batch_jointly(self.cells[cid],
+                                                        jobs)
+        if placed:
+            self.pending = deque(j for j in self.pending
+                                 if j not in placed)
+            self.metrics.counter("sched.joint_admitted").inc(len(placed))
+            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
+                                                        self.now)
+        self._update_hol()
+        return bool(placed)
+
+    def _place_batch_jointly(self, cell: Optional[FleetCell],
+                             jobs: list[SchedJob]) -> set:
+        """Commit one cell group of the admission batch (§13).
+
+        K joint candidates (portfolio seeds x per-job strategy draws x
+        batch-restricted search moves, ``repro.search.joint``) are scored
+        in a single warm ``simulate_batch`` against the live set they
+        will contend with — THE fix for the admission-in-isolation
+        regression: the objective is the projected total wait of
+        everyone, not the arrival's own wait in an empty room."""
+        from ..search.joint import joint_candidates
+
+        graphs = [j.graph for j in jobs]
+        tracker = self.tracker if cell is None else cell.tracker
+        # a non-one-shot configured strategy (e.g. search:new) joins the
+        # candidate pool as an extra whole-batch seed — its isolation-
+        # scored placement is judged jointly like every other candidate
+        extra = None if self.strategy_name in ONE_SHOT_STRATEGIES \
+            else self._strategy
+        prefer = self.strategy_name \
+            if self.strategy_name in ONE_SHOT_STRATEGIES else "new"
+        cands = joint_candidates(graphs, self.cluster, tracker.free_mask(),
+                                 self._admission_rng, self.admission_k,
+                                 sizes=self._domain_sizes(), extra=extra,
+                                 prefer=prefer)
+        if not cands:
+            return set()        # group does not fit — stays queued
+        if cell is None:
+            live_jobs = list(self.live.values())
+            sim = self._sim
+        else:
+            live_jobs = [self.live[jid] for jid in sorted(cell.live)]
+            sim = cell.sim
+        live_graphs = [j.graph for j in live_jobs] + graphs
+        trials = []
+        for cand in cands:
+            trial = self.placement.copy()
+            for jid, cores in cand.items():
+                trial.assign(jid, cores)
+            trials.append(trial)
+        scored = sim.simulate_batch(live_graphs, trials)
+        # remaining-work-weighted wait: the clock accrues each job's
+        # projected wait in proportion to the work it still does under
+        # this contention, so a placement is judged by the wait it
+        # inflicts on work that remains — not by re-counting the full
+        # wait of jobs that are nearly done
+        weight = {j.job_id: max(1.0 - j.work_done, 0.0) for j in live_jobs}
+
+        def _score(r) -> float:
+            return sum(w * weight.get(jid, 1.0)
+                       for jid, w in r.per_job_wait.items())
+
+        if scored[0].max_server_utilisation < self.util_threshold:
+            # seed-placed fleet is not contended: projected margins
+            # between candidates are noise about a future the simulate
+            # cannot see — trust the contention-robust mapper (the same
+            # threshold that gates remap passes gates deviation here)
+            best_i = 0
+        else:
+            best_i = min(range(len(scored)),
+                         key=lambda i: (_score(scored[i]), i))
+        cand = cands[best_i]
+        rec = self.recorder
+        if rec.enabled:
+            rec.instant("admit_batch", track="events",
+                        jobs=[j.job_id for j in jobs],
+                        n_candidates=len(cands),
+                        cell=cell.cell_id if cell is not None else 0,
+                        total_wait=scored[best_i].total_wait)
+        for job in jobs:
+            if rec.enabled:
+                rec.instant("queue_drain", track="events", job=job.job_id,
+                            queue_wait=self.now - job.arrival,
+                            depth=len(self.pending))
+            self.admit(job.graph, now=self.now, cores=cand[job.job_id])
+            job.last_clock = self.now
+        return {j.job_id for j in jobs}
+
+    # -- head-of-line accounting (§13 satellite) --------------------------------
+    def _accrue_hol(self) -> None:
+        """Close the open HOL-blocked interval into the counter."""
+        if self._hol_since is None:
+            return
+        dt = self.now - self._hol_since
+        if dt > 0.0 and self._hol_free > 0:
+            self.metrics.counter("sched.hol_blocked").inc(
+                dt * self._hol_free)
+        self._hol_since = None
+
+    def _update_hol(self) -> None:
+        """Re-arm the head-of-line meter after a queue/capacity change:
+        an interval is HOL-blocked when the FIFO head does not fit the
+        free pool but some later queued job would — the free cores the
+        strict FIFO leaves idle, integrated as core-seconds."""
+        self._accrue_hol()
+        if not self.pending:
+            return
+        free = self.tracker.total_free()
+        if free <= 0 or self.jobs[self.pending[0]].graph.n_procs <= free:
+            return      # head fits (or nothing free): not HOL blocking
+        if any(self.jobs[jid].graph.n_procs <= free
+               for jid in self.pending):
+            self._hol_since = self.now
+            self._hol_free = free
+
     # -- failure engine (DESIGN.md §12) -----------------------------------------
     def _node_cores(self, node: int) -> np.ndarray:
         cpn = self.cluster.cores_per_node
         return np.arange(node * cpn, (node + 1) * cpn, dtype=np.int64)
 
     def _jobs_on_node(self, node: int) -> list[int]:
-        return sorted(jid for jid, job in self.live.items()
-                      if (self.cluster.node_of(job.cores) == node).any())
+        # served by the incremental node->jobs index (updated on every
+        # admit / evict / depart / remap-commit / shrink; validated in
+        # check_invariants) — the old per-call scan touched every live
+        # job's core array on every fault-path query
+        return sorted(self._node_jobs[node])
 
     def _handle_node_fail(self, ev: Event) -> None:
         node = ev.node
@@ -721,6 +1231,7 @@ class FleetScheduler:
         self._node_down_at[node] = self.now
         self.draining.pop(node, None)   # a failure overrides a drain
         self.tracker.set_offline(self._node_cores(node))
+        self._cell_set_offline(node)
         self.metrics.counter("fault.node_failures").inc()
         affected = self._jobs_on_node(node)
         rec = self.recorder
@@ -733,7 +1244,7 @@ class FleetScheduler:
         # killed jobs released their surviving cores — the FIFO head
         # (including the restarts just queued) may fit right now
         placed_any = self._drain_pending()
-        self._reclock()
+        self._reclock_fleet()
         if affected or placed_any:
             self._maybe_schedule_remap()
 
@@ -744,6 +1255,7 @@ class FleetScheduler:
             return      # duplicate recover (overlapping injector windows)
         self.monitor.revive(node)
         self.tracker.set_online(self._node_cores(node))
+        self._cell_set_online(node)
         self.metrics.counter("fault.node_recoveries").inc()
         down_at = self._node_down_at.pop(node, None)
         if down_at is not None:
@@ -757,7 +1269,7 @@ class FleetScheduler:
                         pending_departures=self.events.count(DEPARTURE))
         placed_any = self._drain_pending()
         if placed_any:
-            self._reclock()
+            self._reclock_fleet()
             self._maybe_schedule_remap()
 
     def _handle_drain(self, ev: Event) -> None:
@@ -778,6 +1290,7 @@ class FleetScheduler:
         # draining cores leave the schedulable pool immediately; jobs
         # already on the node keep running until migrated or killed
         self.tracker.set_offline(self._node_cores(node))
+        self._cell_set_offline(node)
         self.metrics.counter("fault.drains").inc()
         rec = self.recorder
         if rec.enabled:
@@ -812,7 +1325,7 @@ class FleetScheduler:
             # the whole job must vacate
             self._requeue(job, self._rollback(job), reason="drain_deadline")
         placed_any = self._drain_pending()
-        self._reclock()
+        self._reclock_fleet()
         if victims or placed_any:
             self._maybe_schedule_remap()
 
@@ -848,6 +1361,9 @@ class FleetScheduler:
         job = self.live.pop(jid)
         cores = self.placement.remove(jid)
         self.tracker.release_cores(cores)
+        self._cell_release(cores)
+        self._index_remove(jid, cores)
+        self._unbind_job_cell(jid, cores, job.graph)
         job.cores = None
         job.epoch += 1
         job.departure = None
@@ -922,6 +1438,14 @@ class FleetScheduler:
         new_cores = local.assignments[job.job_id]
         self.placement.remove(job.job_id)
         self.placement.assign(job.job_id, new_cores)
+        # sync the cell views and the node index (the strategy already
+        # settled the global tracker via the release/claim above)
+        self._cell_release(job.cores)
+        self._cell_claim(new_cores)
+        self._index_remove(job.job_id, job.cores)
+        self._index_add(job.job_id, new_cores)
+        self._unbind_job_cell(job.job_id, job.cores, graph)
+        self._bind_job_cell(job.job_id, new_cores, shrunk)
         job.graph = shrunk          # new object: the warm-sim delta path
         # keys on graph identity, so the swap is a clean remove+add
         job.cores = new_cores
@@ -1006,6 +1530,12 @@ class FleetScheduler:
         """
         if len(self.live) < 2:
             return
+        if self.n_cells > 1 and not self._n_spanning:
+            # sharded fleet with no cross-cell couplings: each cell runs
+            # its own pass against its own warm handle and tracker view
+            for cell in self.cells:
+                self._remap_pass_cell(cell)
+            return
         live = self._live_graphs()
         # the fleet is unchanged since the last re-clock on most remap
         # ticks — reuse its SimResult (sampled by _sample_mutation at the
@@ -1032,6 +1562,34 @@ class FleetScheduler:
         self._record_decision(best if commit else best_any, commit)
         if commit:
             self._commit_remap(best)
+
+    def _remap_pass_cell(self, cell: FleetCell) -> None:
+        """One cell's remap pass: identical policy to the global pass,
+        but contention, candidates and the commit re-key all stay inside
+        the cell (its tracker view cannot propose out-of-cell cores)."""
+        if len(cell.live) < 2:
+            return
+        jobs = [self.live[jid] for jid in sorted(cell.live)]
+        live = [j.graph for j in jobs]
+        res = cell.last_res
+        if res is None:
+            res = cell.sim.simulate(live, self.placement)
+            cell.last_res = res
+        if res.max_server_utilisation < self.util_threshold:
+            return
+        movable = self._movable_jobs(res)
+        if not movable:
+            return
+        candidates = self._reseed_candidates(movable, self.remap_candidates,
+                                             tracker=cell.tracker)
+        if not candidates:
+            return
+        best, best_any = self._evaluate_candidates(live, res, candidates,
+                                                   sim=cell.sim)
+        commit = best is not None
+        self._record_decision(best if commit else best_any, commit)
+        if commit:
+            self._commit_remap(best, cell=cell)
 
     def _remap_search(self, live: list[AppGraph], res) -> None:
         """Budgeted population search over the live placement (§10).
@@ -1101,27 +1659,31 @@ class FleetScheduler:
         movable.sort(key=lambda j: (res.per_job_wait[j], j), reverse=True)
         return movable
 
-    def _reseed_candidates(self, movable: list[int],
-                           k: int) -> list[tuple[int, np.ndarray]]:
+    def _reseed_candidates(self, movable: list[int], k: int,
+                           tracker: Optional[FreeCoreTracker] = None
+                           ) -> list[tuple[int, np.ndarray]]:
         """Trial re-placements: each of the top-k contended jobs re-run
-        through the admission strategy against the current free pool."""
-        snap = self.tracker.snapshot()
+        through the admission strategy against the current free pool
+        (``tracker`` scopes the pool to one cell's view)."""
+        tracker = self.tracker if tracker is None else tracker
+        snap = tracker.snapshot()
         candidates: list[tuple[int, np.ndarray]] = []
         for jid in movable[:k]:
             job = self.live[jid]
-            self.tracker.release_cores(job.cores)
+            tracker.release_cores(job.cores)
             try:
                 local = self._strategy([job.graph], self.cluster,
-                                       self.tracker)
+                                       tracker)
             except RuntimeError:
                 continue
             finally:
-                self.tracker.restore(snap)
+                tracker.restore(snap)
             candidates.append((jid, local.assignments[jid]))
         return candidates
 
     def _evaluate_candidates(self, live: list[AppGraph], res,
-                             candidates: list[tuple[int, np.ndarray]]):
+                             candidates: list[tuple[int, np.ndarray]],
+                             sim: Optional[SimHandle] = None):
         """Score single-job trial moves in one warm ``simulate_batch``.
 
         Returns ``(best, best_any)`` entries — best committable (actual
@@ -1140,7 +1702,16 @@ class FleetScheduler:
             trial = self.placement.copy()
             trial.assign(jid, new_cores)
             trials.append(trial)
-        scored = self._sim.simulate_batch(live, trials)
+        scored = (self._sim if sim is None else sim).simulate_batch(
+            live, trials)
+        # price the migration stall in the same currency as the gain:
+        # ``gain`` is projected wait-seconds saved over the live set's
+        # remaining horizon, ``migration_time`` is wall seconds — so a
+        # second of stall costs the fleet its current wait-accrual rate
+        # (clamped at 1.0 so the rule is never weaker than the raw
+        # seconds comparison the tests pin)
+        horizon = max(res.job_finish.values(), default=0.0)
+        wait_rate = max(res.total_wait / max(horizon, 1e-9), 1.0)
         best = None        # best committable candidate (actual moves only)
         best_any = None    # best overall, recorded when nothing commits
         for (jid, new_cores), res_new in zip(candidates, scored):
@@ -1150,25 +1721,35 @@ class FleetScheduler:
             bytes_moved = moved * job.state_bytes_per_proc
             migration_time = bytes_moved / self.cluster.nic_bw
             gain = res.total_wait - res_new.total_wait
-            net = gain - migration_time * self.migration_cost_factor
+            cost = migration_time * self.migration_cost_factor * wait_rate
+            net = gain - cost
             entry = (net, jid, job.cores, new_cores, moved, bytes_moved,
                      migration_time, gain, res_new)
             if best_any is None or net > best_any[0]:
                 best_any = entry
-            committable = moved > 0 and gain > migration_time \
-                * self.migration_cost_factor
+            committable = moved > 0 and gain > cost
             if committable and (best is None or net > best[0]):
                 best = entry
         return best, best_any
 
-    def _commit_remap(self, entry) -> None:
-        """Apply one scored move: claim cores, book migration cost, re-key."""
+    def _commit_remap(self, entry, cell: Optional[FleetCell] = None) -> None:
+        """Apply one scored move: claim cores, book migration cost, re-key.
+
+        ``cell`` scopes the re-key to one cell when the candidate was
+        scored by that cell's handle (per-cell remap passes); the global
+        path re-keys the whole fleet from the scored result as before."""
         (_, worst_id, old_cores, new_cores, moved, bytes_moved,
          migration_time, gain, res_new) = entry
         job = self.live[worst_id]
         self.tracker.release_cores(old_cores)
         self.tracker.take_cores(new_cores)
+        self._cell_release(old_cores)
+        self._cell_claim(new_cores)
         self.placement.assign(worst_id, new_cores)
+        self._index_remove(worst_id, old_cores)
+        self._index_add(worst_id, new_cores)
+        self._unbind_job_cell(worst_id, old_cores, job.graph)
+        self._bind_job_cell(worst_id, new_cores, job.graph)
         job.cores = new_cores
         job.n_migrations += 1
         job.migrated_bytes += bytes_moved
@@ -1178,10 +1759,15 @@ class FleetScheduler:
             # later re-clock) carries it as (1 - work_done) * sim_finish
             job.work_done -= migration_time \
                 / max(res_new.job_finish[worst_id], 1e-9)
-            # re-key EVERYONE from the already-scored committed candidate
-            # (one batched scan paid for it — no extra simulate here); the
-            # post-remap peak utilisation is sampled inside _reclock
-            self._reclock(res=res_new)
+            # re-key EVERYONE the scored result covers, straight from the
+            # already-scored committed candidate (one batched scan paid
+            # for it — no extra simulate here); the post-remap peak
+            # utilisation is sampled inside the re-clock
+            if cell is not None and self.n_cells > 1:
+                self._dirty_cells.discard(cell.cell_id)
+                self._reclock_cell(cell, res=res_new)
+            else:
+                self._reclock(res=res_new)
             return
         # stale-clock baseline: record post-remap utilisation, refresh the
         # projected waits so committed gains (and collateral damage) show
@@ -1291,8 +1877,62 @@ class FleetScheduler:
         if not np.array_equal(self.tracker.offline, expect_off):
             drift = int((self.tracker.offline ^ expect_off).sum())
             self._invariant(f"offline mask drift on {drift} cores")
+        # the incremental node->jobs index must equal a fresh scan
+        expect_idx: list[set] = [set() for _ in range(self.cluster.n_nodes)]
+        for jid, job in self.live.items():
+            for node in np.unique(self.cluster.node_of(job.cores)):
+                expect_idx[int(node)].add(jid)
+        if expect_idx != self._node_jobs:
+            bad = [n for n in range(self.cluster.n_nodes)
+                   if expect_idx[n] != self._node_jobs[n]]
+            self._invariant(f"node->jobs index drift on nodes {bad}")
+        # cell views tile the global tracker (§13): in-cell used/offline
+        # bits mirror it exactly, out-of-cell cores are pinned offline,
+        # and the cells' core ranges partition the cluster
+        if self.n_cells > 1:
+            covered = np.zeros(self.cluster.n_cores, dtype=bool)
+            for cell in self.cells:
+                in_cell = np.zeros(self.cluster.n_cores, dtype=bool)
+                in_cell[cell.cores] = True
+                if covered[in_cell].any():
+                    self._invariant(f"cell {cell.cell_id} overlaps another")
+                covered |= in_cell
+                if not np.array_equal(cell.tracker.used[in_cell],
+                                      self.tracker.used[in_cell]):
+                    self._invariant(
+                        f"cell {cell.cell_id} used-mask drift")
+                if not np.array_equal(cell.tracker.offline[in_cell],
+                                      self.tracker.offline[in_cell]):
+                    self._invariant(
+                        f"cell {cell.cell_id} offline-mask drift")
+                if not cell.tracker.offline[~in_cell].all():
+                    self._invariant(
+                        f"cell {cell.cell_id} sees out-of-cell cores")
+            if not covered.all():
+                self._invariant("cells do not cover the cluster")
+            # job->cell binding consistent with actual core residency
+            n_span = 0
+            for jid, job in self.live.items():
+                cids = self._cells_of_cores(job.cores)
+                cid = self._job_cell.get(jid)
+                if cids.size > 1:
+                    n_span += 1
+                    if cid != GLOBAL_CELL:
+                        self._invariant(
+                            f"job {jid} spans cells but bound to {cid}")
+                elif cid != int(cids[0]):
+                    self._invariant(
+                        f"job {jid} in cell {int(cids[0])} bound to {cid}")
+            if n_span != self._n_spanning:
+                self._invariant(
+                    f"spanning count drift: {n_span} != {self._n_spanning}")
 
     def stats(self) -> FleetStats:
+        if self._hol_since is not None:
+            # fold the open HOL-blocked interval into the counter, then
+            # re-arm so a mid-run stats() call does not lose the tail
+            self._accrue_hol()
+            self._hol_since = self.now
         finished = [j for j in self.jobs.values() if j.departure is not None]
         placed = [j for j in self.jobs.values() if j.placed_at is not None]
         peak_hist = self.metrics.histogram("sched.peak_sim_util")
@@ -1347,4 +1987,12 @@ class FleetScheduler:
             n_evacuations=self.metrics.counter("fault.evacuations").n,
             n_drain_kills=int(self.metrics.counter(
                 "fault.drain_kills").total),
+            hol_blocked_core_s=self.metrics.counter(
+                "sched.hol_blocked").total,
+            n_joint_batches=self.metrics.counter("sched.joint_batches").n,
+            n_joint_admitted=int(self.metrics.counter(
+                "sched.joint_admitted").total),
+            n_spanning_jobs=self.metrics.counter("sched.spanning_jobs").n,
+            n_cell_escalations=self.metrics.counter(
+                "sched.cell_escalations").n,
         )

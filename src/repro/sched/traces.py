@@ -108,6 +108,38 @@ def rack_oversub_trace(rate: float = 0.5, n_arrivals: int = 16,
     )
 
 
+def fleet64_cluster(oversub: float = 4.0,
+                    node_bw: float = 1e9) -> ClusterTopology:
+    """64 nodes × 8 cores in 16 racks of 4 nodes, 4 pods of 4 racks.
+
+    The ≥64-node fleet the cell-sharded scheduler (DESIGN.md §13) is
+    sized for: rack-granular cells hold 4 nodes / 32 cores each, so a
+    single rack comfortably fits any job in the rack_oversub mix and
+    most admissions stay cell-local.
+    """
+    rack_bw = 4 * node_bw / oversub
+    hier = NetworkHierarchy([
+        NetLevel("node", fan_in=8, bw=node_bw, latency=100e-9),
+        NetLevel("rack", fan_in=4, bw=rack_bw, latency=300e-9),
+        NetLevel("pod", fan_in=4, bw=rack_bw, latency=1e-6),
+    ])
+    return ClusterTopology(n_nodes=64, sockets_per_node=2,
+                           cores_per_socket=4, nic_bw=node_bw,
+                           hierarchy=hier)
+
+
+def fleet64_trace(rate: float = 1.0, n_arrivals: int = 32,
+                  seed: int = 0, oversub: float = 4.0) -> TraceSpec:
+    return TraceSpec(
+        name="fleet64",
+        cluster=fleet64_cluster(oversub=oversub),
+        arrivals=poisson_trace(rack_oversub_mix(), rate, n_arrivals,
+                               seed=seed),
+        count_scale=0.02,
+        state_bytes_per_proc=64 * MB,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Serving-fleet trace — configs/ model jobs on a TPU fleet
 # ---------------------------------------------------------------------------
@@ -261,6 +293,7 @@ TRACES: dict[str, Callable[..., TraceSpec]] = {
     "npb_poisson": lambda **kw: npb_trace(**kw),
     "serve_fleet": lambda **kw: serve_fleet_trace(**kw),
     "rack_oversub": lambda **kw: rack_oversub_trace(**kw),
+    "fleet64": lambda **kw: fleet64_trace(**kw),
 }
 
 

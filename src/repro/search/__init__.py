@@ -7,7 +7,10 @@ Public surface:
   strategy   — search_strategy: the optimizer wearing the one-shot
                strategy contract (registered as ``search:<seed>`` and
                ``anneal`` in STRATEGIES / TPU_STRATEGIES)
+  joint      — joint_candidates: K whole-batch placements for the
+               scheduler's window-batched admission (DESIGN.md §13)
 """
+from .joint import joint_candidates
 from .moves import Move, SearchState, domain_sizes, neighbours, propose
 from .optimizer import (DEFAULT_BUDGET, DEFAULT_POPULATION, SearchResult,
                         auto_objective_scale, objective_of, quantize,
@@ -19,4 +22,5 @@ __all__ = [
     "DEFAULT_BUDGET", "DEFAULT_POPULATION", "SearchResult",
     "auto_objective_scale", "objective_of", "quantize", "search_placement",
     "search_strategy", "search_strategy_result",
+    "joint_candidates",
 ]

@@ -1,0 +1,84 @@
+"""Regenerate the sequential-scheduler golden replays (PR 8).
+
+The goldens pin the PRE-joint-admission scheduler's observable outcome
+on the committed traces — per-job records and the headline stats for (1)
+``table4_poisson`` fault-free, (2) ``table4_poisson`` under the PR-7
+reference fault trace, (3) ``rack_oversub`` with the budgeted remap
+search.  ``tests/test_joint_admission.py`` replays the same scenarios
+through ``FleetScheduler(admission_window=0.0, cells=1)`` and requires
+bit-identical results: the default path of the joint/sharded scheduler
+IS the sequential scheduler.
+
+Regenerate (only when an intentional behaviour change moves the
+sequential baseline — the whole point is that refactors must NOT):
+
+    PYTHONPATH=src python tests/golden/regen_sched_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "sched_seq_golden.json")
+
+# (name, trace kwargs, scheduler kwargs, with reference faults)
+SCENARIOS = [
+    ("table4_nofault",
+     {"name": "table4_poisson", "seed": 0, "n_arrivals": 12},
+     {"strategy": "new", "remap_interval": 5.0}, False),
+    ("table4_reference_faults",
+     {"name": "table4_poisson", "seed": 0, "n_arrivals": 12},
+     {"strategy": "new", "remap_interval": 5.0,
+      "failure_policy": "requeue", "drain_policy": "proactive"}, True),
+    ("rack_oversub_remap_search",
+     {"name": "rack_oversub", "seed": 0, "n_arrivals": 10},
+     {"strategy": "new", "remap_interval": 5.0, "remap_budget": 64}, False),
+]
+
+# the fields the byte-identity test compares — per-job end state plus
+# every headline statistic derived from the event loop's decisions
+FIELDS = ("n_jobs", "makespan", "total_queue_wait", "total_msg_wait",
+          "nic_p99_util", "peak_sim_util", "n_remap_commits",
+          "n_remap_rejects", "migrated_bytes", "goodput", "useful_core_s",
+          "alloc_core_s", "lost_work_s", "mttr_mean", "n_node_failures",
+          "n_node_recoveries", "n_restarts", "n_shrinks", "n_drains",
+          "n_evacuations", "n_drain_kills", "per_job")
+
+
+def run_scenario(trace_kw: dict, sched_kw: dict, faults: bool,
+                 **extra) -> dict:
+    from repro.sched import FleetScheduler, get_trace
+    from repro.sched.traces import reference_fault_trace
+
+    kw = dict(trace_kw)
+    spec = get_trace(kw.pop("name"), **kw)
+    sched = FleetScheduler(spec.cluster,
+                           state_bytes_per_proc=spec.state_bytes_per_proc,
+                           count_scale=spec.count_scale,
+                           **dict(sched_kw, **extra))
+    sched.submit_trace(spec.arrivals)
+    if faults:
+        sched.submit_faults(reference_fault_trace(spec.cluster))
+    stats = sched.run()
+    sched.check_invariants()
+    d = stats.to_dict()
+    out = {f: d[f] for f in FIELDS}
+    # stringify per_job keys the way a JSON round-trip does
+    out["per_job"] = {str(k): v for k, v in out["per_job"].items()}
+    return out
+
+
+def main() -> None:
+    doc = {}
+    for name, trace_kw, sched_kw, faults in SCENARIOS:
+        doc[name] = run_scenario(trace_kw, sched_kw, faults)
+        print(f"{name}: makespan={doc[name]['makespan']:.3f} "
+              f"msg_wait={doc[name]['total_msg_wait']:.3f}")
+    with open(GOLDEN, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"-> {GOLDEN}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Joint batched admission + sharded cells property tests (PR 8).
+
+Three contracts from DESIGN.md §13:
+
+1. **Default-path byte identity** — ``admission_window=0.0, cells=1``
+   must replay the committed sequential-scheduler goldens bit-for-bit,
+   including the PR-7 reference fault scenario. The joint/sharded
+   scheduler's default path IS the sequential scheduler.
+2. **Window-bounded FIFO wait** — batching arrivals may hold a job at
+   most ``admission_window`` longer than the sequential path would;
+   never more (the backfill look-ahead only admits jobs that fit the
+   cores left after the FIFO head sweep, so it cannot displace anyone).
+3. **Cell views tile the tracker** — with ``cells > 1`` every per-cell
+   FreeCoreTracker view must mirror the global tracker on its own
+   cores, pin everything else offline, and the cells must partition the
+   cluster; checked after *every* event, through a fault storm.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.sched import FleetScheduler, get_trace
+from repro.sched.traces import fault_trace
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+_spec = importlib.util.spec_from_file_location(
+    "regen_sched_golden", os.path.join(GOLDEN_DIR, "regen_sched_golden.py"))
+regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regen)
+
+with open(os.path.join(GOLDEN_DIR, "sched_seq_golden.json")) as f:
+    GOLDEN = json.load(f)
+
+
+# -- 1. byte identity of the window=0 / cells=1 path ----------------------
+
+@pytest.mark.parametrize("name,trace_kw,sched_kw,faults", regen.SCENARIOS,
+                         ids=[s[0] for s in regen.SCENARIOS])
+def test_default_path_is_sequential(name, trace_kw, sched_kw, faults):
+    """window=0, cells=1 replays the pre-joint goldens bit-for-bit."""
+    got = regen.run_scenario(trace_kw, sched_kw, faults,
+                             admission_window=0.0, cells=1)
+    assert got == GOLDEN[name]
+
+
+def test_explicit_defaults_match_implicit():
+    """Passing the defaults explicitly changes nothing vs omitting them."""
+    trace_kw = {"name": "table4_poisson", "seed": 0, "n_arrivals": 8}
+    sched_kw = {"strategy": "new", "remap_interval": 5.0}
+    assert (regen.run_scenario(trace_kw, sched_kw, False)
+            == regen.run_scenario(trace_kw, sched_kw, False,
+                                  admission_window=0.0, cells=1))
+
+
+# -- 2. window-bounded FIFO wait ------------------------------------------
+
+def _run(trace, window, *, n=12, cells=1, strategy="new", faults=None):
+    spec = get_trace(trace, seed=0, n_arrivals=n)
+    sched = FleetScheduler(spec.cluster, strategy,
+                           state_bytes_per_proc=spec.state_bytes_per_proc,
+                           count_scale=spec.count_scale,
+                           admission_window=window, cells=cells)
+    sched.submit_trace(spec.arrivals)
+    if faults is not None:
+        sched.submit_faults(faults)
+    stats = sched.run()
+    sched.check_invariants()
+    return stats
+
+
+@pytest.mark.parametrize("trace", ["table4_poisson", "rack_oversub"])
+@pytest.mark.parametrize("window", [0.25, 1.0])
+def test_window_bounds_fifo_wait(trace, window):
+    """No job queues more than ``admission_window`` beyond sequential."""
+    seq = _run(trace, 0.0)
+    win = _run(trace, window)
+    assert win.n_jobs == seq.n_jobs
+    for jid, rec in seq.per_job.items():
+        delta = win.per_job[jid]["queue_wait"] - rec["queue_wait"]
+        assert delta <= window + 1e-9, (
+            f"job {jid} queued {delta:.4f}s beyond the {window}s window")
+
+
+def test_uncontended_jobs_admit_within_window():
+    """When everything fits on arrival, queue wait never exceeds window."""
+    win = 0.5
+    stats = _run("table4_poisson", win, n=6)
+    for jid, rec in stats.per_job.items():
+        assert rec["queue_wait"] <= win + 1e-9, (jid, rec["queue_wait"])
+
+
+# -- 3. cell views tile the global tracker --------------------------------
+
+def _stepped_run(*, cells, window=0.0, faults=None, n=16,
+                 every=1, trace="fleet64"):
+    spec = get_trace(trace, seed=0, n_arrivals=n)
+    sched = FleetScheduler(spec.cluster, "new",
+                           state_bytes_per_proc=spec.state_bytes_per_proc,
+                           count_scale=spec.count_scale,
+                           admission_window=window, cells=cells)
+    sched.submit_trace(spec.arrivals)
+    if faults is not None:
+        sched.submit_faults(faults(spec.cluster))
+    i = 0
+    while sched.step() is not None:
+        i += 1
+        if i % every == 0:
+            sched.check_invariants()
+    sched.check_invariants()
+    return sched
+
+
+def test_cell_views_tile_tracker_every_event():
+    sched = _stepped_run(cells="rack")
+    assert sched.n_cells == 16
+    stats = sched.stats()
+    assert stats.n_jobs == 16
+    assert np.isfinite(stats.total_msg_wait)
+
+
+def test_cell_views_tile_under_fault_storm():
+    storm = lambda cluster: fault_trace(
+        cluster, horizon=40.0, node_mtbf=120.0, node_mttr=8.0,
+        rack_mtbf=40.0, rack_size=4, n_drains=2, seed=7)
+    sched = _stepped_run(cells="rack", window=0.5, faults=storm)
+    stats = sched.stats()
+    assert stats.n_node_failures > 0
+    assert stats.n_jobs == 16
+    assert all(rec["departure"] is not None
+               for rec in stats.per_job.values())
+
+
+def test_pod_cells_and_spanning_jobs():
+    """Coarser pod cells still tile; spanning jobs escalate cleanly."""
+    sched = _stepped_run(cells="pod", window=0.5, every=3)
+    assert sched.n_cells == 4
+    assert sched.stats().n_jobs == 16
+
+
+# -- determinism of the windowed / celled paths ---------------------------
+
+def test_windowed_celled_run_is_deterministic():
+    def once():
+        storm = lambda cluster: fault_trace(
+            cluster, horizon=30.0, node_mtbf=150.0, node_mttr=6.0,
+            rack_mtbf=None, seed=3)
+        return _run("fleet64", 0.5, n=12, cells="rack",
+                    faults=storm(get_trace("fleet64", seed=0,
+                                           n_arrivals=12).cluster)).to_dict()
+
+    a, b = once(), once()
+    assert a == b

@@ -200,7 +200,7 @@ def test_fifo_drain_placement_schedules_remap_tick():
     sched.submit(_heavy(1, 120, procs=24), at=0.1)
     sched.step()                       # place job 0 (no tick: interval None)
     sched.step()                       # job 1 queues behind it
-    assert sched.pending == [1]
+    assert list(sched.pending) == [1]
     assert sched.events.count(REMAP) == 0
 
     # enable remapping only now, so the ONLY path that can schedule the
