@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Import-layering lint for the decomposed scheduler (DESIGN.md §14).
+
+The FleetScheduler facade owns all cross-subsystem routing: the four
+engine modules — ``sched.clock`` / ``sched.admission`` / ``sched.remap``
+/ ``sched.recovery`` — must stay peers. This lint fails (exit 1) if any
+of them imports another engine, the ``scheduler`` facade, or anything
+outside the allowed foundations:
+
+* sibling leaf modules: ``repro.sched.events`` / ``repro.sched.cells``
+  / ``repro.sched.loads`` (pure data structures + views, no engine
+  logic);
+* foundation packages: ``repro.core`` / ``repro.obs`` /
+  ``repro.search`` / ``repro.ckpt``;
+* the stdlib and numpy.
+
+The walk is AST-based (covers function-local imports too), so it needs
+no importable environment. Run from the repo root:
+
+    python benchmarks/check_layering.py
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHED = os.path.join(REPO, "src", "repro", "sched")
+
+ENGINES = ("clock", "admission", "remap", "recovery")
+LEAF_SIBLINGS = {"events", "cells", "loads"}
+FOUNDATIONS = {"core", "obs", "search", "ckpt"}
+STDLIB_OK = {"__future__", "collections", "dataclasses", "typing", "numpy"}
+
+
+def _resolve(module: str, node: ast.ImportFrom | ast.Import,
+             pkg_parts: list[str]) -> list[str]:
+    """Absolute dotted names a statement imports, relative dots resolved
+    against ``pkg_parts`` (the module's package path)."""
+    if isinstance(node, ast.Import):
+        return [alias.name for alias in node.names]
+    base = node.module or ""
+    if node.level:
+        anchor = pkg_parts[:len(pkg_parts) - (node.level - 1)]
+        base = ".".join(anchor + ([base] if base else []))
+    # `from X import a, b` may pull submodules X.a — flag both forms
+    return [base] + [f"{base}.{alias.name}" for alias in node.names]
+
+
+def check_module(mod: str) -> list[str]:
+    """Violation strings for one engine module (empty = clean)."""
+    path = os.path.join(SCHED, f"{mod}.py")
+    tree = ast.parse(open(path).read(), filename=path)
+    pkg = ["repro", "sched"]
+    bad: list[str] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Import, ast.ImportFrom)):
+            continue
+        for name in _resolve(mod, node, pkg):
+            parts = name.split(".")
+            if parts[0] != "repro":
+                if parts[0] not in STDLIB_OK:
+                    bad.append(f"{mod}.py:{node.lineno}: non-foundation "
+                               f"import {name!r}")
+                continue
+            if len(parts) < 2:
+                continue
+            if parts[1] == "sched":
+                sub = parts[2] if len(parts) > 2 else ""
+                if sub in ENGINES or sub == "scheduler":
+                    bad.append(f"{mod}.py:{node.lineno}: engine imports "
+                               f"{name!r} (engines are peers; route "
+                               f"through the facade)")
+                elif sub and sub not in LEAF_SIBLINGS:
+                    bad.append(f"{mod}.py:{node.lineno}: import {name!r} "
+                               f"outside the leaf siblings "
+                               f"{sorted(LEAF_SIBLINGS)}")
+            elif parts[1] not in FOUNDATIONS:
+                bad.append(f"{mod}.py:{node.lineno}: import {name!r} "
+                           f"outside the foundations "
+                           f"{sorted(FOUNDATIONS)}")
+    return bad
+
+
+def main() -> int:
+    violations: list[str] = []
+    for mod in ENGINES:
+        violations += check_module(mod)
+    if violations:
+        print("scheduler layering violations:")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print(f"layering ok: {', '.join(ENGINES)} import only "
+          f"{sorted(LEAF_SIBLINGS)} + {sorted(FOUNDATIONS)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

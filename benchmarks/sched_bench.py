@@ -222,6 +222,50 @@ def cell_comparison(trace_name: str = "fleet64", strategy: str = "new", *,
     }
 
 
+def nested_cell_comparison(trace_name: str = "fleet1k",
+                           strategy: str = "new", *, n_arrivals: int = 64,
+                           rate: float = 16.0, seed: int = 0,
+                           sim_backend: str = "auto") -> dict:
+    """Global vs flat rack cells vs nested pod/rack cells on the 1k-node
+    fleet (DESIGN.md §13/§14).
+
+    The flat fabric escalates every rack-spanning job's re-clock to the
+    whole fleet; the nested fabric stops one level up at the owning pod
+    (512 cores instead of 8,192), so the rack-oversub mix's 48-proc jobs
+    no longer couple the fleet. Reports the nested fabric's wall-time
+    speedup over flat cells (``speedup_vs_flat``, gated ``>= 1`` as
+    ``sched.nested_cell_speedup`` in ``baselines.json``) and over the
+    unsharded scheduler (``speedup_vs_global``).
+    """
+    out: dict[str, dict] = {}
+    for label, cells in (("global", 1), ("flat", "rack"),
+                         ("nested", "pod/rack")):
+        rep = run_trace(trace_name, (strategy,), n_arrivals=n_arrivals,
+                        rate=rate, seed=seed, remap_interval=None,
+                        sim_backend=sim_backend, cells=cells)
+        row = rep["strategies"][strategy]
+        out[label] = {"wall_time_s": row["wall_time_s"],
+                      "makespan": row["makespan"],
+                      "total_msg_wait": row["total_msg_wait"],
+                      "n_spanning_jobs": row["n_spanning_jobs"],
+                      "n_cell_escalations": row["n_cell_escalations"],
+                      "n_cross_cell_migrations":
+                          row["n_cross_cell_migrations"]}
+    nested_w = max(out["nested"]["wall_time_s"], 1e-9)
+    return {
+        "trace": trace_name,
+        "strategy": strategy,
+        "params": {"seed": seed, "rate": rate, "n_arrivals": n_arrivals,
+                   "sim_backend": sim_backend},
+        "global": out["global"],
+        "flat": out["flat"],
+        "nested": out["nested"],
+        "speedup_vs_flat": round(out["flat"]["wall_time_s"] / nested_w, 3),
+        "speedup_vs_global": round(
+            out["global"]["wall_time_s"] / nested_w, 3),
+    }
+
+
 def measure_obs_overhead(trace_name: str = "table4_poisson", *,
                          n_arrivals: int = 12, seed: int = 0,
                          repeats: int = 3) -> dict:
@@ -281,6 +325,11 @@ def _smoke_failures(report: dict) -> list[str]:
     if gain is not None and gain <= 0:
         fails.append(f"NewMapping no longer beats Blocked on msg wait "
                      f"(gain {gain})")
+    nest = report.get("nested_cells")
+    if nest and nest["speedup_vs_flat"] < 1.0:
+        fails.append(
+            f"nested pod/rack cells slower than flat rack cells on "
+            f"{nest['trace']} ({nest['speedup_vs_flat']}x)")
     return fails
 
 
@@ -313,6 +362,17 @@ def _print_table(report: dict) -> None:
               f"(speedup {cell['speedup']}x, "
               f"{cell['sharded']['n_spanning_jobs']} spanning, "
               f"{cell['sharded']['n_cell_escalations']} escalations)",
+              file=sys.stderr)
+    nest = report.get("nested_cells")
+    if nest:
+        print(f"  nested_cells[{nest['trace']}]: global "
+              f"{nest['global']['wall_time_s']}s / flat "
+              f"{nest['flat']['wall_time_s']}s -> nested "
+              f"{nest['nested']['wall_time_s']}s "
+              f"({nest['speedup_vs_flat']}x vs flat, "
+              f"{nest['speedup_vs_global']}x vs global; "
+              f"{nest['nested']['n_cell_escalations']} pod escalations vs "
+              f"{nest['flat']['n_cell_escalations']} fleet escalations)",
               file=sys.stderr)
 
 
@@ -392,6 +452,12 @@ def main(argv=None) -> None:
                 **({} if args.quick else
                    {"cells": cells if cells != 1 else "rack",
                     "admission_window": args.admission_window}))
+            # 1k-node fleet: nested pod/rack cells vs flat vs global —
+            # quick trims the trace (the full-scale row is
+            # `--scenario fleet1k --cells pod/rack --arrivals 2048`)
+            report["nested_cells"] = nested_cell_comparison(
+                n_arrivals=64 if args.quick else args.arrivals,
+                seed=args.seed, sim_backend=args.sim_backend)
         if args.quick or args.clock_compare:
             # quick gates the fixed acceptance traces at their default
             # rates; --clock-compare mirrors exactly the run the user

@@ -1,28 +1,42 @@
 """Online fleet scheduling — dynamic multi-tenant placement (DESIGN.md §3).
 
-Public surface:
-  events     — Event / EventQueue discrete-event core
-  scheduler  — FleetScheduler, FleetStats, RemapDecision
-  cells      — FleetCell shards + the cells=1 aliasing contract (§13)
+Public surface (layered, DESIGN.md §14):
+  events     — Event / EventQueue discrete-event core + stale_event
+  scheduler  — the FleetScheduler facade, FleetStats
+  clock      — WorkClock work ledger + re-clocking engine, SchedJob
+  admission  — AdmissionController (FIFO + windowed joint batches, §13)
+  remap      — RemapEngine budgeted remap passes, RemapDecision
+  recovery   — RecoveryEngine fault/drain handling (§12)
+  cells      — CellFabric placement domains; flat or nested "pod/rack"
+               shards + the cells=1 aliasing contract (§13)
+  loads      — projected per-level / per-NIC load views
   traces     — named arrival scenarios (paper tables + serving fleet)
                and the seeded fault injector (§12)
 """
-from .cells import GLOBAL_CELL, FleetCell, build_cells, derive_cell_nodes
+from .admission import AdmissionController
+from .cells import (GLOBAL_CELL, CellFabric, FleetCell, build_cells,
+                    derive_cell_nodes)
+from .clock import SchedJob, WorkClock
 from .events import (ADMIT, ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL,
-                     NODE_RECOVER, REMAP, Event, EventQueue)
-from .scheduler import (FleetScheduler, FleetStats, RemapDecision, SchedJob,
-                        SchedulerInvariantError, projected_level_loads,
-                        projected_nic_loads, resolve_strategy)
+                     NODE_RECOVER, REMAP, Event, EventQueue, stale_event)
+from .loads import projected_level_loads, projected_nic_loads
+from .recovery import RecoveryEngine
+from .remap import RemapDecision, RemapEngine
+from .scheduler import (FleetScheduler, FleetStats,
+                        SchedulerInvariantError, resolve_strategy)
 from .traces import (TRACES, NodeEvent, TraceSpec, fault_trace, get_trace,
                      reference_fault_trace)
 
 __all__ = [
     "ADMIT", "ARRIVAL", "DEPARTURE", "REMAP", "NODE_FAIL", "NODE_RECOVER",
-    "DRAIN", "Event", "EventQueue",
-    "GLOBAL_CELL", "FleetCell", "build_cells", "derive_cell_nodes",
-    "FleetScheduler", "FleetStats", "RemapDecision", "SchedJob",
-    "SchedulerInvariantError", "projected_level_loads",
-    "projected_nic_loads", "resolve_strategy",
+    "DRAIN", "Event", "EventQueue", "stale_event",
+    "GLOBAL_CELL", "CellFabric", "FleetCell", "build_cells",
+    "derive_cell_nodes",
+    "FleetScheduler", "FleetStats", "SchedulerInvariantError",
+    "resolve_strategy",
+    "WorkClock", "SchedJob", "AdmissionController", "RemapEngine",
+    "RemapDecision", "RecoveryEngine",
+    "projected_level_loads", "projected_nic_loads",
     "TRACES", "TraceSpec", "get_trace",
     "NodeEvent", "fault_trace", "reference_fault_trace",
 ]

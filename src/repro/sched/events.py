@@ -65,6 +65,24 @@ class Event:
         return f"t={self.time:g} {self.kind} job={self.job_id}{tail}"
 
 
+def stale_event(event_epoch: int, live_epoch: Optional[int]) -> bool:
+    """THE staleness rule for lazily-invalidated event streams (§3).
+
+    Re-keying never removes a superseded event from the heap: it bumps
+    the target's generation and pushes a fresh event, leaving the old
+    one to be discarded here when popped. An event is stale when its
+    target is gone (``live_epoch is None``) or the generations no
+    longer match. Both epoch streams route through this one predicate:
+
+    * **departures** pass the job's ``epoch`` (``None`` once the job
+      left the live set) — re-clocks and remap commits bump it;
+    * **drain-deadline ticks** pass the node's drain generation
+      (``None`` once the drain was cancelled by a failure/recover or
+      already enforced) — every new drain window bumps it.
+    """
+    return live_epoch is None or event_epoch != live_epoch
+
+
 class EventQueue:
     """Min-heap of events ordered by (time, kind priority, insertion seq).
 

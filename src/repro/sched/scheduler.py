@@ -1,102 +1,51 @@
-"""Online fleet scheduler — contention-aware placement under churn.
+"""FleetScheduler facade — event-driven placement under churn.
 
-The paper evaluates its mapping strategy on a *static* batch of jobs
-placed once on an empty cluster. Real clusters (and the ROADMAP's serving
-fleet) are dynamic: jobs arrive, run, and depart, leaving fragmented
-free-core pools. This module turns the static machinery into an
-event-driven scheduler (DESIGN.md §3):
+The paper places a *static* batch once on an empty cluster; this package
+turns that machinery into a dynamic scheduler (DESIGN.md §3) split into
+layered subsystems (DESIGN.md §14), each owning one concern and holding
+a back-reference to this facade:
 
-* **Arrivals** are placed immediately with any of the mapping strategies
-  (``blocked`` / ``cyclic`` / ``drb`` / ``new`` / ``new_tpu``) against the
-  *current fragmented* :class:`~repro.core.graphs.FreeCoreTracker` — the
-  strategies were extended to accept a live tracker instead of assuming an
-  empty cluster. Jobs that do not fit wait in a FIFO queue.
-* **Departures** are driven by the queueing simulator
-  (``repro.core.simulator``) — the simulator is the scheduler's clock,
-  and the clock is kept honest under churn: after EVERY fleet mutation
-  (admit, depart, remap commit) the live set is re-simulated and every
-  live job's departure is re-keyed under the elapsed-work model
-  ``departure = now + (1 - work_done) * sim_finish`` (DESIGN.md §3).
-  Superseded departure events are invalidated by per-job event epochs
-  and discarded lazily. ``reclock=False`` restores the historical
-  clocked-once-at-admission behaviour as a measurable baseline. Each
-  re-clock is a single warm simulate through ``SimHandle`` (delta
-  workload assembly, DESIGN.md §8) so honesty does not multiply cost.
-* **Remap passes** run periodically: when the simulator's projected peak
-  channel (NIC) utilisation exceeds a threshold, up to
-  ``remap_candidates`` of the most-contended live jobs are trially
-  re-placed into the current free pool and scored in one
-  ``simulate_batch`` call (a single batched scan on the JAX backend).
-  The best move is committed only if the projected wait reduction exceeds
-  an explicit migration cost — process state moved over the NIC,
-  ``state_bytes_per_proc x procs-that-change-node / nic_bw``.
-  ``sim_backend`` selects the simulator backend for every projection
-  (DESIGN.md §8; ``auto`` -> segmented scan on CPU).
-
-* **Joint batched admission** (DESIGN.md §13): with ``admission_window``
-  set, arrivals are collected for up to that many sim-seconds (plus the
-  FIFO backlog that fits, bounded look-ahead) and placed as ONE batch —
-  K joint placements (portfolio seeds × per-job strategy assignments ×
-  search moves over the whole batch, ``repro.search.joint``) scored in a
-  single warm ``simulate_batch`` against the full live set, so admission
-  finally sees cross-job contention instead of scoring each arrival in
-  isolation. ``admission_window=0`` (the default) keeps the sequential
-  FIFO path byte-identical to the historical scheduler.
-
-* **Fleet cells** (DESIGN.md §13): ``cells=N`` (or a hierarchy level
-  name like ``"rack"``) shards the fleet into node-contiguous cells,
-  each with its own ``FreeCoreTracker`` view, warm ``SimHandle`` and
-  cell-local re-clocks; a thin balancer routes arrivals to the fitting
-  cell with the least projected level-load and only escalates to a
-  global re-simulate while a job spans cells. ``cells=1`` (the default)
-  aliases cell 0 to the global tracker/handle — the sequential path.
-
-* **Failures and maintenance** (DESIGN.md §12): injected ``NODE_FAIL`` /
-  ``NODE_RECOVER`` / ``DRAIN`` events (see ``sched.traces.fault_trace``)
-  drive a failure engine with two job-recovery policies — requeue-restart
-  (kill, roll back to the last checkpoint via
-  ``ckpt.checkpoint.CheckpointCostModel``, re-admit through the FIFO with
-  the restore traffic booked as work debt) and elastic-shrink (shed the
-  dead node's procs with ``ckpt.fault_tolerance.ElasticReMesher`` and
-  re-place the survivors' shrunk CTG) — plus two drain policies:
-  proactive (evacuate the draining node through the remap machinery
-  before the deadline) and kill (let the deadline hard-kill whatever is
-  left). Node liveness is canonical in a sim-clocked
-  ``HeartbeatMonitor``; dead/draining cores leave the schedulable pool
-  through the tracker's ``offline`` mask without touching occupancy.
+* ``sched.clock``     — WorkClock: work ledger + departure re-keying.
+* ``sched.admission`` — AdmissionController: FIFO / windowed joint batch.
+* ``sched.remap``     — RemapEngine: budgeted remap + cross-cell passes.
+* ``sched.recovery``  — RecoveryEngine: fault / drain handling (§12).
+* ``sched.cells``     — CellFabric: flat or nested placement domains
+  (§13); ``cells=1`` aliases cell 0 to the global tracker so the
+  sequential path stays byte-identical to the historical scheduler.
 
 Determinism: no wall clock, no unseeded randomness — identical traces
-yield identical schedules, which the tests rely on.
-
-Observability (DESIGN.md §11): every decision the scheduler takes —
-arrive / admit / queue / queue-drain / depart / remap-propose /
-remap-commit / remap-reject — is emitted as a structured trace event
-through ``repro.obs`` (a no-op unless a recorder is installed or passed
-in), and all utilisation sampling routes through ONE metrics hook
-(:meth:`FleetScheduler._sample_mutation`) fired exactly once per fleet
-mutation, so the p99 statistics in :class:`FleetStats` weight every
-mutation uniformly regardless of how often remap ticks fire.
+yield identical schedules. Every decision emits a structured trace event
+through ``repro.obs`` (§11), and utilisation sampling routes through ONE
+hook (:meth:`FleetScheduler._sample_mutation`) fired exactly once per
+fleet mutation so :class:`FleetStats` percentiles weight mutations
+uniformly.
 """
 from __future__ import annotations
 
-import dataclasses
 import sys
 from collections import deque
-from typing import Callable, Iterable, Optional, Sequence, Union
+from typing import Callable, Iterable, Optional, Union
 
 import numpy as np
 
 from .. import obs
 from ..ckpt.checkpoint import CheckpointCostModel
-from ..ckpt.fault_tolerance import ElasticReMesher, HeartbeatMonitor
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
-from ..core.mapping import ONE_SHOT_STRATEGIES, STRATEGIES
+from ..core.mapping import STRATEGIES
 from ..core.simulator import SimHandle, resolve_backend
 from ..core.workloads import Arrival
-from .cells import GLOBAL_CELL, FleetCell, build_cells
+from .admission import AdmissionController
+from .cells import CellFabric, FleetCell
+from .clock import SchedJob, WorkClock
 from .events import (ADMIT, ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL,
-                     NODE_RECOVER, REMAP, Event, EventQueue)
+                     NODE_RECOVER, REMAP, Event, EventQueue, stale_event)
+from .loads import projected_level_loads, projected_nic_loads  # noqa: F401
+# ^ re-exported: the historical import surface of this module
+from .recovery import RecoveryEngine
+from .stats import FleetStats  # noqa: F401
+# ^ re-exported: the historical import surface of this module
+from .remap import RemapDecision, RemapEngine  # noqa: F401
 
 MB = 1 << 20
 
@@ -121,179 +70,24 @@ def resolve_strategy(strategy: StrategyLike) -> Callable[..., Placement]:
     raise KeyError(f"unknown strategy {strategy!r}; known: {known}")
 
 
-def projected_level_loads(graphs: Sequence[AppGraph], placement: Placement,
-                          cluster: ClusterTopology) -> dict[str, dict]:
-    """Per-hierarchy-level link loads (bytes/s) implied by current demand.
-
-    For every level of the cluster's :class:`NetworkHierarchy`, sums each
-    link's TX and RX load over all live jobs along the simulator's LCA
-    path rule (DESIGN.md §9). Returns ``{level: {"tx", "rx", "bw"}}``.
-    """
-    hier = cluster.net_hierarchy()
-    agg: dict[str, dict] = {}
-    for g in graphs:
-        cores = placement.assignments[g.job_id]
-        demand = g.demand
-        src, dst = np.nonzero(demand)
-        s_core, r_core = cores[src], cores[dst]
-        inter = cluster.node_of(s_core) != cluster.node_of(r_core)
-        loads = hier.link_loads(s_core, r_core, demand[src, dst],
-                                n_cores=cluster.n_cores, active=inter)
-        for name, d in loads.items():
-            if name not in agg:
-                agg[name] = d
-            else:
-                agg[name] = {"tx": agg[name]["tx"] + d["tx"],
-                             "rx": agg[name]["rx"] + d["rx"],
-                             "bw": d["bw"]}
-    return agg
-
-
-def projected_nic_loads(graphs: Sequence[AppGraph], placement: Placement,
-                        cluster: ClusterTopology) -> np.ndarray:
-    """Per-link load (bytes/s, TX+RX) at the hierarchy's OUTERMOST level.
-
-    With the default hierarchies this reproduces the historical view:
-    paper mode — every inter-node byte at the per-node NIC; TPU mode —
-    pod-crossing bytes at the per-node DCN NIC.
-    """
-    hier = cluster.net_hierarchy()
-    top = hier.levels[-1].name
-    loads = projected_level_loads(graphs, placement, cluster)
-    if top not in loads:
-        units = -(-cluster.n_cores // hier.attach[-1])
-        return np.zeros(units)
-    return loads[top]["tx"] + loads[top]["rx"]
-
-
 # ---------------------------------------------------------------------------
-# Records
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class SchedJob:
-    """One job's lifecycle inside the scheduler."""
-
-    job_id: int
-    graph: AppGraph
-    arrival: float
-    state_bytes_per_proc: float
-    placed_at: Optional[float] = None
-    cores: Optional[np.ndarray] = None
-    departure: Optional[float] = None
-    msg_wait: float = 0.0            # simulated message wait (s); under the
-    #   re-clocking engine this is the work-weighted integral of the job's
-    #   projected wait over its lifetime, under reclock=False the stale
-    #   admission-time sample
-    n_migrations: int = 0
-    migrated_bytes: float = 0.0
-    # -- elapsed-work clock state (DESIGN.md §3) ---------------------------
-    epoch: int = 0                   # departure re-key generation; the
-    #   job's departure event is only honoured when its epoch matches
-    work_done: float = 0.0           # completed work fraction; may go
-    #   negative transiently when a migration adds payload-transfer debt
-    sim_finish: float = 0.0          # full-job duration under the
-    #   contention of the last re-clock (the work rate is 1/sim_finish)
-    wait_proj: float = 0.0           # per-job wait projection at last re-clock
-    last_clock: float = 0.0          # sim time work was last accrued
-    # -- failure-recovery state (DESIGN.md §12) ----------------------------
-    restart_debt_s: float = 0.0      # restore traffic (s over the NIC)
-    #   pending from a restart/shrink; folded into work_done as debt at
-    #   the job's next re-key, exactly like a migration stall
-    n_restarts: int = 0              # kills survived (requeue or shrink)
-    lost_work_s: float = 0.0         # work discarded by checkpoint rollbacks
-
-    @property
-    def queue_wait(self) -> float:
-        # for restarted jobs this spans original arrival -> latest
-        # placement, so it includes the pre-kill residency (§12)
-        return (self.placed_at - self.arrival) if self.placed_at is not None else 0.0
-
-
-@dataclasses.dataclass(frozen=True)
-class RemapDecision:
-    """One remap-pass verdict (kept for inspection and tests)."""
-
-    time: float
-    job_id: int
-    wait_gain: float           # projected total-wait reduction (s)
-    bytes_moved: float         # migration payload over the NIC
-    migration_time: float      # bytes_moved / nic_bw (s)
-    committed: bool
-
-
-@dataclasses.dataclass
-class FleetStats:
-    """Aggregate outcome of one scheduler run.
-
-    Two kinds of numbers live here (DESIGN.md §11): **per-job end state**
-    (``makespan`` / ``total_queue_wait`` / ``total_msg_wait`` /
-    ``migrated_bytes`` / ``per_job`` — one record per job, complete by
-    construction) and **per-mutation samples** (``nic_p99_util`` /
-    ``peak_sim_util`` / ``level_p99_util`` — statistics over the
-    utilisation samples taken once per fleet mutation).
-    ``sample_counts`` carries the record count behind every sampled
-    statistic so downstream consumers can tell a 3-sample p99 from a
-    3000-sample one; ``sampling_policy`` names the weighting contract
-    (one sample per admit/depart/remap-commit, never per event tick).
-    """
-
-    n_jobs: int
-    makespan: float                  # last departure (s, sim clock)
-    total_queue_wait: float          # sum over jobs of (placed_at - arrival)
-    total_msg_wait: float            # sum of simulated per-job message waits
-    nic_p99_util: float              # p99 of per-node NIC utilisation samples
-    peak_sim_util: float             # max simulator server utilisation seen
-    n_remap_commits: int
-    n_remap_rejects: int
-    migrated_bytes: float
-    per_job: dict[int, dict]
-    level_p99_util: dict = dataclasses.field(default_factory=dict)
-    # ^ p99 per hierarchy level of per-link utilisation samples (§9)
-    sample_counts: dict = dataclasses.field(default_factory=dict)
-    # ^ records behind each sampled statistic, e.g. {"peak_sim_util": 31,
-    #   "nic_util": 29, "level.rack": 29} — 0 samples -> the statistic is 0
-    sampling_policy: str = "per-mutation"
-    # -- failure / recovery outcomes (DESIGN.md §12) -----------------------
-    goodput: float = 1.0             # useful_core_s / alloc_core_s; 1.0
-    #   when no work was accrued (reclock=False or an empty run)
-    useful_core_s: float = 0.0       # productive core-seconds (work that
-    #   survived to the end — checkpoint rollbacks subtract their losses)
-    alloc_core_s: float = 0.0        # core-seconds jobs held cores
-    lost_work_s: float = 0.0         # job-seconds discarded by rollbacks
-    mttr_mean: float = 0.0           # mean kill -> re-placement latency
-    n_node_failures: int = 0
-    n_node_recoveries: int = 0
-    n_restarts: int = 0              # requeue-restart kills
-    n_shrinks: int = 0               # elastic-shrink survivals
-    n_drains: int = 0                # drain windows begun
-    n_evacuations: int = 0           # jobs migrated off draining nodes
-    n_drain_kills: int = 0           # jobs hard-killed at drain deadlines
-    # -- joint admission / cells (DESIGN.md §13) ---------------------------
-    hol_blocked_core_s: float = 0.0  # free core-seconds wasted while the
-    #   FIFO head did not fit but a later queued job would have (HOL
-    #   blocking actually costing capacity)
-    n_joint_batches: int = 0         # window/backlog batches placed jointly
-    n_joint_admitted: int = 0        # jobs admitted through joint batches
-    n_spanning_jobs: int = 0         # placements that crossed cell borders
-    n_cell_escalations: int = 0      # re-clocks escalated cell -> global
-
-    def to_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        return d
-
-
-# ---------------------------------------------------------------------------
-# The scheduler
+# The facade
 # ---------------------------------------------------------------------------
 class FleetScheduler:
     """Event-driven multi-job scheduler over a shared cluster/fleet.
+
+    A thin facade over the layered subsystems (DESIGN.md §14): it owns
+    the shared fleet state — ``tracker`` / ``placement`` / ``live`` /
+    ``pending`` / ``events`` / ``metrics`` / ``now`` — plus the two
+    primitive mutations :meth:`admit` and :meth:`depart`, and routes
+    every event to the owning subsystem (``clock`` / ``admission`` /
+    ``remap`` / ``recovery`` / ``fabric``).
 
     Low-level API (direct, used by property tests): :meth:`admit` /
     :meth:`depart` mutate the fleet immediately and keep the free-core
     accounting consistent. High-level API: :meth:`submit` /
     :meth:`submit_trace` enqueue timestamped arrivals and :meth:`run`
-    plays the event loop, with departures scheduled from simulated job
-    finish times and optional periodic remap passes.
+    plays the event loop.
     """
 
     def __init__(self, cluster: ClusterTopology,
@@ -319,7 +113,8 @@ class FleetScheduler:
                  admission_k: int = 24,
                  admission_lookahead: int = 8,
                  admission_rng_seed: int = 0,
-                 cells: Union[int, str] = 1):
+                 cells: Union[int, str] = 1,
+                 cross_cell_migration: bool = True):
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
         self._strategy = resolve_strategy(strategy)
@@ -333,14 +128,12 @@ class FleetScheduler:
         self.count_scale = count_scale
         self.sim_backend = resolve_backend(sim_backend)
         self.remap_candidates = max(1, remap_candidates)
-        # remap_budget switches the remap pass from the fixed
-        # remap_candidates reseed trials to the budgeted population
-        # search (repro.search moves scored through the same warm
-        # simulate_batch path, DESIGN.md §10); the budget caps
-        # placements scored per pass
+        # remap_budget switches the remap pass from fixed reseed trials
+        # to the budgeted population search (DESIGN.md §10); the budget
+        # caps placements scored per pass
         self.remap_budget = remap_budget
         self.remap_population = max(1, remap_population)
-        self._remap_rng = np.random.default_rng(remap_rng_seed)
+        self.cross_cell_migration = cross_cell_migration
         self.reclock = reclock
         # warm-start simulation handle: every projection below goes through
         # it so per-event cost is delta assembly + scans, not full rebuilds
@@ -363,82 +156,39 @@ class FleetScheduler:
         self._arrivals_pending = 0    # un-popped ARRIVAL events; counted
         # here because scanning the heap would touch every superseded
         # departure event the re-clock leaves behind (lazy deletion)
-        self.decisions: list[RemapDecision] = []
         # all utilisation sampling lives in the metrics registry (§11):
         # histogram sched.peak_sim_util, series util.nic / util.level.*,
         # each fed by the ONE per-mutation hook _sample_mutation
         self.metrics = obs.Metrics()
         # trace recorder: the explicit argument wins; otherwise whatever
-        # is installed process-wide at event time (obs.install / the
-        # REPRO_TRACE opt-in) — the NULL no-op by default
+        # is installed process-wide at event time (NULL no-op default)
         self._recorder = recorder
-        self._remap_scheduled = False
-        # -- failure engine state (DESIGN.md §12) --------------------------
-        if failure_policy not in ("requeue", "elastic"):
-            raise ValueError(f"unknown failure_policy {failure_policy!r}")
-        if drain_policy not in ("proactive", "kill"):
-            raise ValueError(f"unknown drain_policy {drain_policy!r}")
-        self.failure_policy = failure_policy
-        self.drain_policy = drain_policy
-        self.ckpt = ckpt_model if ckpt_model is not None \
-            else CheckpointCostModel()
-        self.elastic_model_size = max(1, elastic_model_size)
-        # node liveness is canonical here; the sim-time clock (NOT the
-        # wall-clock default) keeps last_seen — and every trace field
-        # derived from it — byte-identical across seeded runs
-        self.monitor = HeartbeatMonitor(cluster.n_nodes,
-                                        deadline_s=float("inf"),
-                                        clock=lambda: self.now)
-        self.draining: dict[int, float] = {}   # node -> hard-kill deadline
-        self._drain_gen: dict[int, int] = {}   # stale-deadline-tick guard
-        self._node_down_at: dict[int, float] = {}
-        self._kill_time: dict[int, float] = {} # job -> eviction time (MTTR)
-        # goodput ledger: productive vs allocated core-seconds, accrued in
-        # _advance_work without touching the per-job clock math (the
-        # no-fault bit-identical guarantee relies on that separation)
-        self._useful_core_s = 0.0
-        self._alloc_core_s = 0.0
-        # -- joint batched admission (DESIGN.md §13) -----------------------
-        self.admission_window = float(admission_window)
-        if self.admission_window < 0.0:
-            raise ValueError("admission_window must be >= 0")
-        if self.admission_window > 0.0 and not reclock:
-            raise ValueError("admission_window requires reclock=True "
-                             "(batch keying re-keys the live set)")
-        self.admission_k = max(1, admission_k)
-        self.admission_lookahead = max(1, admission_lookahead)
-        self._admission_rng = np.random.default_rng(admission_rng_seed)
-        self._admit_scheduled = False   # an ADMIT window-close is in flight
-        # head-of-line accounting (free core-seconds wasted while the FIFO
-        # head blocked a later queued job that would have fit)
-        self._hol_since: Optional[float] = None
-        self._hol_free = 0
+        # -- layered subsystems (DESIGN.md §14) ----------------------------
+        self.clock = WorkClock(self)
+        self.recovery = RecoveryEngine(
+            self, failure_policy=failure_policy, drain_policy=drain_policy,
+            ckpt_model=ckpt_model, elastic_model_size=elastic_model_size)
+        self.admission = AdmissionController(
+            self, window=admission_window, k=admission_k,
+            lookahead=admission_lookahead, rng_seed=admission_rng_seed,
+            reclock=reclock)
+        self.remap = RemapEngine(self, rng_seed=remap_rng_seed)
         # incremental node -> resident job-ids index; replaces the
         # _jobs_on_node linear scan over the live set (updated on every
         # admit / evict / depart / remap-commit / shrink, validated by
         # check_invariants against a fresh scan)
         self._node_jobs: list[set] = [set() for _ in range(cluster.n_nodes)]
         # -- fleet cells (DESIGN.md §13) -----------------------------------
-        self.cells: list[FleetCell] = build_cells(
-            cluster, cells, count_scale=count_scale,
-            backend=self.sim_backend, global_tracker=self.tracker,
-            global_sim=self._sim)
-        self.n_cells = len(self.cells)
-        self._job_cell: dict[int, int] = {}   # live job -> cell (or GLOBAL)
-        self._n_spanning = 0                  # live jobs crossing cells
-        self._dirty_cells: set = set()        # cells touched since reclock
-        if self.n_cells > 1:
-            if not reclock:
-                raise ValueError("cells > 1 requires reclock=True "
-                                 "(cell-local re-clocks)")
-            # one warm flat per cell handle plus the global one must
-            # coexist in the flat-assembly cache or warm starts thrash
-            from ..core import sim_scan
-            sim_scan.set_flat_cache_size(2 * self.n_cells + 4)
-            self._node_cell = np.empty(cluster.n_nodes, dtype=np.int64)
-            for cell in self.cells:
-                self._node_cell[cell.nodes] = cell.cell_id
+        self.fabric = CellFabric(cluster, cells, count_scale=count_scale,
+                                 backend=self.sim_backend,
+                                 global_tracker=self.tracker,
+                                 global_sim=self._sim,
+                                 metrics=self.metrics)
+        if self.fabric.n_cells > 1 and not reclock:
+            raise ValueError("cells > 1 requires reclock=True "
+                             "(cell-local re-clocks)")
 
+    # -- back-compat attribute surface (subsystem-owned state) ---------------
     @property
     def recorder(self) -> obs.Recorder:
         """The active trace recorder (NULL no-op when tracing is off)."""
@@ -446,12 +196,75 @@ class FleetScheduler:
 
     @property
     def _util_samples(self) -> list[float]:
-        """Raw peak-server-utilisation samples (one per fleet mutation);
-        kept as a view into the metrics registry for tests/consumers of
-        the historical attribute."""
+        """Historical attribute: a view into the metrics registry."""
         return self.metrics.histogram("sched.peak_sim_util").samples
 
-    # -- cell views and the node->jobs index (DESIGN.md §13) -----------------
+    @property
+    def decisions(self) -> list[RemapDecision]:
+        return self.remap.decisions
+
+    @property
+    def monitor(self):
+        return self.recovery.monitor
+
+    @property
+    def draining(self) -> dict[int, float]:
+        return self.recovery.draining
+
+    @property
+    def failure_policy(self) -> str:
+        return self.recovery.failure_policy
+
+    @property
+    def drain_policy(self) -> str:
+        return self.recovery.drain_policy
+
+    @property
+    def ckpt(self) -> CheckpointCostModel:
+        return self.recovery.ckpt
+
+    @property
+    def admission_window(self) -> float:
+        return self.admission.window
+
+    @property
+    def cells(self) -> list[FleetCell]:
+        return self.fabric.cells
+
+    @property
+    def n_cells(self) -> int:
+        return self.fabric.n_cells
+
+    # -- subsystem delegators (kept as methods so tests can subclass or
+    #    monkeypatch the historical hook points) -----------------------------
+    def _advance_work(self) -> None:
+        self.clock.advance()
+
+    def _reclock(self, res=None) -> None:
+        self.clock.reclock(res)
+
+    def _reclock_fleet(self) -> None:
+        self.clock.reclock_fleet()
+
+    def _drain_pending(self) -> bool:
+        return self.admission.drain_pending()
+
+    def _admit_batch(self) -> bool:
+        return self.admission.admit_batch()
+
+    def _maybe_schedule_remap(self) -> None:
+        self.remap.maybe_schedule()
+
+    def _remap_pass(self) -> None:
+        self.remap.run_pass()
+
+    def _remap_search(self, live, res) -> None:
+        self.remap.search(live, res)
+
+    def _evacuate(self, node: int) -> None:
+        self.recovery.evacuate(node)
+
+    # -- the node->jobs index ------------------------------------------------
     def _index_add(self, jid: int, cores: np.ndarray) -> None:
         for node in np.unique(self.cluster.node_of(cores)):
             self._node_jobs[int(node)].add(jid)
@@ -460,106 +273,15 @@ class FleetScheduler:
         for node in np.unique(self.cluster.node_of(cores)):
             self._node_jobs[int(node)].discard(jid)
 
-    def _cells_of_cores(self, cores: np.ndarray) -> np.ndarray:
-        return np.unique(self._node_cell[self.cluster.node_of(cores)])
+    def _node_cores(self, node: int) -> np.ndarray:
+        cpn = self.cluster.cores_per_node
+        return np.arange(node * cpn, (node + 1) * cpn, dtype=np.int64)
 
-    def _mark_dirty(self, cores: np.ndarray) -> None:
-        """A mutation touched these cores: invalidate the owning cells'
-        cached results and queue them for the next fleet re-clock."""
-        if self.n_cells == 1:
-            return
-        for cid in self._cells_of_cores(cores):
-            self.cells[cid].last_res = None
-            self._dirty_cells.add(int(cid))
-
-    def _cell_claim(self, cores: np.ndarray,
-                    settled: Optional[FreeCoreTracker] = None) -> None:
-        """Mirror a core claim into every overlapping cell view (no-op for
-        the single-cell alias). ``settled`` names a tracker the strategy
-        already claimed on, skipped here."""
-        if self.n_cells == 1:
-            return
-        node_ids = self.cluster.node_of(cores)
-        for cid in np.unique(self._node_cell[node_ids]):
-            cell = self.cells[cid]
-            if cell.tracker is settled:
-                continue
-            cell.tracker.take_cores(cores[self._node_cell[node_ids] == cid])
-
-    def _cell_release(self, cores: np.ndarray) -> None:
-        if self.n_cells == 1:
-            return
-        node_ids = self.cluster.node_of(cores)
-        for cid in np.unique(self._node_cell[node_ids]):
-            self.cells[cid].tracker.release_cores(
-                cores[self._node_cell[node_ids] == cid])
-
-    def _cell_set_offline(self, node: int) -> None:
-        if self.n_cells == 1:
-            return
-        cell = self.cells[int(self._node_cell[node])]
-        cell.tracker.set_offline(self._node_cores(node))
-        cell.last_res = None
-        self._dirty_cells.add(cell.cell_id)
-
-    def _cell_set_online(self, node: int) -> None:
-        if self.n_cells == 1:
-            return
-        cell = self.cells[int(self._node_cell[node])]
-        cell.tracker.set_online(self._node_cores(node))
-        cell.last_res = None
-        self._dirty_cells.add(cell.cell_id)
-
-    def _bind_job_cell(self, jid: int, cores: np.ndarray,
-                       graph: AppGraph) -> None:
-        """Record which cell a placement landed in (GLOBAL_CELL when it
-        spans cells) and book its demand into the balancer's load."""
-        if self.n_cells == 1:
-            return
-        cids = self._cells_of_cores(cores)
-        if cids.size > 1:
-            self._job_cell[jid] = GLOBAL_CELL
-            self._n_spanning += 1
-            self.metrics.counter("sched.spanning_jobs").inc()
-            self._dirty_cells.add(GLOBAL_CELL)
-        else:
-            cell = self.cells[int(cids[0])]
-            self._job_cell[jid] = cell.cell_id
-            cell.live.add(jid)
-            cell.load += float(graph.demand.sum())
-        self._mark_dirty(cores)
-
-    def _unbind_job_cell(self, jid: int, cores: np.ndarray,
-                         graph: AppGraph) -> None:
-        if self.n_cells == 1:
-            return
-        cid = self._job_cell.pop(jid)
-        if cid == GLOBAL_CELL:
-            self._n_spanning -= 1
-        else:
-            cell = self.cells[cid]
-            cell.live.discard(jid)
-            cell.load -= float(graph.demand.sum())
-        self._mark_dirty(cores)
-
-    def _route_cell(self, graph: AppGraph,
-                    remaining: Optional[dict] = None) -> Optional[FleetCell]:
-        """Balancer: the fitting cell with least projected level-load
-        ``(resident demand + job demand) / uplink capacity``; ``None``
-        when no single cell fits (the job will span cells)."""
-        procs = graph.n_procs
-        demand = float(graph.demand.sum())
-        best: Optional[FleetCell] = None
-        best_score = 0.0
-        for cell in self.cells:
-            free = remaining[cell.cell_id] if remaining is not None \
-                else cell.total_free()
-            if free < procs:
-                continue
-            score = (cell.load + demand) / cell.uplink_bw
-            if best is None or score < best_score:
-                best, best_score = cell, score
-        return best
+    def _jobs_on_node(self, node: int) -> list[int]:
+        # served by the incremental node->jobs index (validated in
+        # check_invariants) — the old per-call scan touched every live
+        # job's core array on every fault-path query
+        return sorted(self._node_jobs[node])
 
     # -- low-level fleet mutations (immediate) -------------------------------
     def admit(self, graph: AppGraph, now: Optional[float] = None,
@@ -592,26 +314,32 @@ class FleetScheduler:
         if cores is not None:
             # joint admission chose the placement; claim it everywhere
             self.tracker.take_cores(cores)
-            self._cell_claim(cores)
-        elif self.n_cells > 1:
+            self.fabric.claim(cores)
+        elif self.fabric.n_cells > 1:
             if cell is None:
-                cell = self._route_cell(graph)
+                cell = self.fabric.route(graph)
             if cell is not None:
                 # in-cell placement: the strategy claims the cell view,
-                # mirror into the global tracker
+                # mirror into the global tracker and any other
+                # overlapping views (the enclosing pod, when nested)
+                snap = cell.tracker.snapshot()
                 try:
                     local = self._strategy([graph], self.cluster,
                                            cell.tracker)
                 except RuntimeError:
-                    cell = None     # fragmented cell — fall back to global
+                    # fragmented cell — roll back the partial claim the
+                    # failed strategy left behind, fall back to global
+                    cell.tracker.restore(snap)
+                    cell = None
             if cell is not None:
                 cores = local.assignments[graph.job_id]
                 self.tracker.take_cores(cores)
+                self.fabric.claim(cores, settled=cell.tracker)
             else:
                 # no single cell fits: place globally (spanning job)
                 local = self._strategy([graph], self.cluster, self.tracker)
                 cores = local.assignments[graph.job_id]
-                self._cell_claim(cores)
+                self.fabric.claim(cores)
         else:
             local = self._strategy([graph], self.cluster, self.tracker)
             cores = local.assignments[graph.job_id]
@@ -620,9 +348,9 @@ class FleetScheduler:
         job.placed_at = now
         self.live[job.job_id] = job
         self._index_add(job.job_id, cores)
-        self._bind_job_cell(job.job_id, cores, graph)
+        self.fabric.bind(job.job_id, cores, graph)
         self._last_res = None
-        killed_at = self._kill_time.pop(job.job_id, None)
+        killed_at = self.recovery.kill_time.pop(job.job_id, None)
         if killed_at is not None:
             # recovery completes when the restarted job holds cores again
             self.metrics.histogram("fault.mttr").observe(now - killed_at)
@@ -642,9 +370,9 @@ class FleetScheduler:
             raise KeyError(f"job {job_id} is not live")
         cores = self.placement.remove(job_id)
         self.tracker.release_cores(cores)
-        self._cell_release(cores)
+        self.fabric.release(cores)
         self._index_remove(job_id, cores)
-        self._unbind_job_cell(job_id, cores, job.graph)
+        self.fabric.unbind(job_id, cores, job.graph)
         job.departure = now if job.departure is None else job.departure
         self.done[job_id] = job
         self._last_res = None
@@ -661,7 +389,7 @@ class FleetScheduler:
                          migrations=job.n_migrations)
         return job
 
-    # -- high-level event API --------------------------------------------------
+    # -- high-level event API ------------------------------------------------
     def submit(self, graph: AppGraph, at: float = 0.0,
                state_bytes_per_proc: Optional[float] = None) -> None:
         """Enqueue a timestamped arrival for :meth:`run`."""
@@ -685,10 +413,8 @@ class FleetScheduler:
         """Enqueue injected node events for :meth:`run` (DESIGN.md §12).
 
         Accepts anything with ``time`` / ``kind`` / ``node`` (and, for
-        DRAIN, ``deadline``) attributes — e.g. the records produced by
-        ``sched.traces.fault_trace``. Requires the re-clocking engine:
-        recovery re-keys every survivor's departure, which the stale
-        clock cannot express.
+        DRAIN, ``deadline``) attributes, e.g. ``traces.fault_trace``
+        records. Requires ``reclock=True``.
         """
         if not self.reclock:
             raise ValueError("fault injection requires reclock=True "
@@ -717,47 +443,45 @@ class FleetScheduler:
         ev = self.events.pop()
         if self.reclock and ev.kind == DEPARTURE:
             job = self.live.get(ev.job_id)
-            if job is None or ev.epoch != job.epoch:
-                # superseded by a re-key (or already departed): skip the
-                # work-accrual sweep and the NIC sampling — re-clocking
-                # leaves up to one dead event per live job per mutation
-                # in the heap. Stale mode keeps the historical full path
-                # (its rare stale events DID advance the clock + sample).
+            if stale_event(ev.epoch, None if job is None else job.epoch):
+                # superseded by a re-key (or already departed): skip
+                # before the clock advance — re-clocking leaves dead
+                # events in the heap. Stale mode keeps the full path
+                # (its rare stale events DID advance the clock).
                 return ev
         self.now = max(self.now, ev.time)
         rec = self.recorder
         if rec.enabled:
             rec.set_clock(self.now)
         if self.reclock:
-            self._advance_work()
+            self.clock.advance()
         if ev.kind == ARRIVAL:
             self._arrivals_pending -= 1
-            self._handle_arrival(self.jobs[ev.job_id])
+            self.admission.handle_arrival(self.jobs[ev.job_id])
         elif ev.kind == DEPARTURE:
             self._handle_departure(ev)
         elif ev.kind == NODE_FAIL:
-            self._handle_node_fail(ev)
+            self.recovery.node_fail(ev)
         elif ev.kind == NODE_RECOVER:
-            self._handle_node_recover(ev)
+            self.recovery.node_recover(ev)
         elif ev.kind == DRAIN:
-            self._handle_drain(ev)
+            self.recovery.drain(ev)
         elif ev.kind == ADMIT:
-            self._admit_scheduled = False
-            if self._admit_batch():
-                self._reclock_fleet()
-                self._maybe_schedule_remap()
+            self.admission.scheduled = False
+            if self.admission.admit_batch():
+                self.clock.reclock_fleet()
+                self.remap.maybe_schedule()
         elif ev.kind == REMAP:
-            self._remap_scheduled = False
+            self.remap.scheduled = False
             self._remap_pass()
-            self._maybe_schedule_remap()
+            self.remap.maybe_schedule()
         return ev
 
     def run(self) -> FleetStats:
         """Play all events; returns aggregate fleet statistics.
 
-        When a recorder is active, any exception escaping the event loop
-        carries the flight recorder's event tail (the timeline that led
-        to the failure) as an exception note / stderr dump.
+        With a recorder active, any escaping exception carries the
+        flight recorder's event tail as a note / stderr dump.
         """
         try:
             while self.step() is not None:
@@ -773,1032 +497,40 @@ class FleetScheduler:
             raise
         return self.stats()
 
-    # -- the re-clocking engine (DESIGN.md §3) ---------------------------------
-    def _advance_work(self) -> None:
-        """Accrue elapsed work on every live job up to ``self.now``.
-
-        Between re-clocks a job progresses at rate ``1/sim_finish`` (its
-        full duration under the contention of the last re-clock), so the
-        fraction completed over ``dt`` is ``dt/sim_finish``; ``msg_wait``
-        integrates the projected wait over the same fractions, making the
-        final per-job wait a work-weighted blend of every contention
-        regime the job lived through.
-        """
-        for job in self.live.values():
-            dt = self.now - job.last_clock
-            if dt > 0.0 and job.sim_finish > 0.0:
-                frac = min(dt / job.sim_finish,
-                           max(1.0 - job.work_done, 0.0))
-                before = job.work_done
-                job.work_done += frac
-                job.msg_wait += frac * job.wait_proj
-                # goodput ledger (§12): productive seconds are the
-                # POSITIVE work actually gained — paying off migration /
-                # restore debt is machine time, not progress. Pure
-                # side-accounting: the per-job clock math above is
-                # untouched, so no-fault runs stay bit-identical.
-                self._useful_core_s += (
-                    (max(job.work_done, 0.0) - max(before, 0.0))
-                    * job.sim_finish * job.graph.n_procs)
-            if dt > 0.0:
-                self._alloc_core_s += dt * job.graph.n_procs
-            job.last_clock = self.now
-
-    def _reclock(self, res=None) -> None:
-        """Re-key every live job's departure from a fresh simulation.
-
-        ``departure = now + (1 - work_done) * sim_finish``. If contention
-        did not change, the re-derived departure equals the job's current
-        one (the elapsed-work model telescopes) and no event is pushed;
-        otherwise the job's epoch is bumped and the superseded event dies
-        lazily in the heap. ``res`` lets the remap commit path reuse its
-        already-scored candidate instead of simulating again.
-        """
-        if not self.live:
-            return
-        if res is None:
-            res = self._sim.simulate(self._live_graphs(), self.placement)
-        self._last_res = res
-        self._sample_mutation(res)
-        self._rekey_jobs(self.live.values(), res)
-        if self.n_cells > 1:
-            # a global re-simulate covers every cell: their cached
-            # results are superseded and nothing is left dirty
-            for cell in self.cells:
-                cell.last_res = None
-            self._dirty_cells.clear()
-
-    def _rekey_jobs(self, jobs: Iterable[SchedJob], res) -> None:
-        for job in jobs:
-            job.sim_finish = max(res.job_finish[job.job_id], 1e-9)
-            job.wait_proj = res.per_job_wait[job.job_id]
-            if job.restart_debt_s > 0.0:
-                # restore traffic from a restart/shrink stalls the job
-                # exactly like a migration: fold it into work_done as
-                # debt at the first re-key under the new contention
-                # (no-op float-compare when no fault ever touched the job)
-                job.work_done -= job.restart_debt_s / job.sim_finish
-                job.restart_debt_s = 0.0
-            departure = self.now \
-                + max(1.0 - job.work_done, 0.0) * job.sim_finish
-            if job.departure is not None and abs(departure - job.departure) \
-                    <= 1e-9 * max(1.0, abs(departure)):
-                continue                      # clock unchanged — keep event
-            job.epoch += 1
-            job.departure = departure
-            self.events.push(Event(time=departure, kind=DEPARTURE,
-                                   job_id=job.job_id, epoch=job.epoch))
-
-    def _reclock_fleet(self) -> None:
-        """Cell-aware re-clock dispatch (§13): single-cell fleets re-clock
-        globally (the historical path, bit-for-bit); sharded fleets
-        re-simulate only the cells dirtied since the last re-clock,
-        escalating to one global re-simulate while any live job spans
-        cells (its contention couples the cells it touches)."""
-        if self.n_cells == 1:
-            self._reclock()
-            return
-        dirty = self._dirty_cells
-        self._dirty_cells = set()
-        if not dirty:
-            return
-        if self._n_spanning or GLOBAL_CELL in dirty:
-            self.metrics.counter("sched.cell_escalations").inc()
-            self._reclock()
-            return
-        for cid in sorted(dirty):
-            self._reclock_cell(self.cells[cid])
-
-    def _reclock_cell(self, cell: FleetCell, res=None) -> None:
-        """Re-key one cell's resident jobs from the cell's warm handle.
-
-        The cell-local simulate sees exactly the cell's live set — jobs
-        in other cells share no links with it (placements are node-
-        disjoint and cell-contained), so the restriction is exact, not
-        an approximation."""
-        jobs = [self.live[jid] for jid in sorted(cell.live)
-                if jid in self.live]
-        if not jobs:
-            cell.last_res = None
-            return
-        if res is None:
-            res = cell.sim.simulate([j.graph for j in jobs], self.placement)
-        cell.last_res = res
-        self._sample_mutation(res)
-        self._rekey_jobs(jobs, res)
-
-    # -- event handlers ----------------------------------------------------------
-    def _handle_arrival(self, job: SchedJob) -> None:
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("arrive", track="events", job=job.job_id,
-                        job_name=job.graph.name, procs=job.graph.n_procs)
-        if self.admission_window > 0.0:
-            # joint batched admission (§13): hold the arrival until the
-            # window closes, then place the whole batch at once.
-            # Batching only pays when placements interact — on an
-            # uncontended fleet with an empty queue the arrival is
-            # placed immediately (holding it would cost latency and
-            # buy nothing the joint score could see). A search strategy
-            # never places its own bypass: below the contention
-            # threshold its projected edge is noise (the same reason
-            # the batch chooser trusts candidate 0 there), so the
-            # bypass uses the robust one-shot mapper instead
-            res = self._last_res
-            if not self.pending and res is not None \
-                    and res.max_server_utilisation < self.util_threshold \
-                    and job.graph.n_procs <= self.tracker.total_free():
-                if self.strategy_name in ONE_SHOT_STRATEGIES:
-                    self._place_and_clock(job)
-                    self._maybe_schedule_remap()
-                    return
-                if self.n_cells == 1:
-                    from ..search.joint import joint_candidates
-                    cands = joint_candidates(
-                        [job.graph], self.cluster, self.tracker.free_mask(),
-                        self._admission_rng, 1, sizes=self._domain_sizes())
-                    if cands:
-                        self.admit(job.graph, now=self.now,
-                                   cores=cands[0][job.job_id])
-                        job.last_clock = self.now
-                        self._reclock_fleet()
-                        self._maybe_schedule_remap()
-                        return
-            self.pending.append(job.job_id)
-            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
-                                                        self.now)
-            if rec.enabled:
-                rec.instant("queue", track="events", job=job.job_id,
-                            depth=len(self.pending))
-            if not self._admit_scheduled:
-                self.events.push(Event(time=self.now + self.admission_window,
-                                       kind=ADMIT))
-                self._admit_scheduled = True
-            # anchor the remap cadence at ARRIVAL time, exactly where the
-            # sequential path anchors it (place-on-arrival then schedule):
-            # otherwise the admission hold shifts every downstream remap
-            # tick by the window, and tick-vs-departure races make the
-            # windowed fleet see a systematically different free pool
-            self._maybe_schedule_remap()
-            self._update_hol()
-            return
-        # strict FIFO: while anyone is queued, later arrivals queue behind
-        # them (head-of-line blocking) instead of jumping ahead
-        if self.pending or job.graph.n_procs > self.tracker.total_free():
-            self.pending.append(job.job_id)
-            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
-                                                        self.now)
-            if rec.enabled:
-                rec.instant("queue", track="events", job=job.job_id,
-                            depth=len(self.pending))
-            self._update_hol()
-            return
-        self._place_and_clock(job)
-        self._maybe_schedule_remap()
-
     def _handle_departure(self, ev: Event) -> None:
         job = self.live.get(ev.job_id)
         # stale event: the job's departure was re-keyed (re-clock or remap
         # commit bumped its epoch) or the job already departed
-        if job is None or ev.epoch != job.epoch:
+        if stale_event(ev.epoch, None if job is None else job.epoch):
             return
         self.depart(ev.job_id, now=self.now)
         # departures free cores — drain the FIFO head while it fits
-        placed_any = self._drain_pending()
+        placed_any = self.admission.drain_pending()
         if self.reclock:
             # one simulate covers the drained jobs AND the survivors'
             # speed-up now that the departed job's traffic is gone
-            self._reclock_fleet()
-        if self.draining and self.drain_policy == "proactive":
+            self.clock.reclock_fleet()
+        if self.recovery.draining \
+                and self.recovery.drain_policy == "proactive":
             # freed cores may unblock a stalled evacuation — retry every
             # draining node before its deadline hard-kills the leftovers
-            for node in sorted(self.draining):
-                self._evacuate(node)
+            for node in sorted(self.recovery.draining):
+                self.recovery.evacuate(node)
         if placed_any:
             # drain-placements change contention like arrivals do — keep
             # the periodic remap tick alive (it previously lapsed here)
-            self._maybe_schedule_remap()
+            self.remap.maybe_schedule()
 
-    def _drain_pending(self) -> bool:
-        """Admit queued jobs from the FIFO head while they fit; returns
-        whether anything was placed. Callers holding the re-clock engine
-        must :meth:`_reclock` afterwards — the whole drained batch is
-        keyed by one simulate, per-job re-clocks at the same timestamp
-        would only push events the next iteration supersedes.
-
-        With an admission window configured, capacity events route the
-        backlog through :meth:`_admit_batch` instead — requeued restarts
-        and freed cores re-enter the joint batched path (§13)."""
-        if self.admission_window > 0.0:
-            return self._admit_batch()
-        placed_any = False
-        while self.pending:
-            head = self.jobs[self.pending[0]]
-            if head.graph.n_procs > self.tracker.total_free():
-                break
-            self.pending.popleft()
-            rec = self.recorder
-            if rec.enabled:
-                rec.instant("queue_drain", track="events", job=head.job_id,
-                            queue_wait=self.now - head.arrival,
-                            depth=len(self.pending))
-            if self.reclock:
-                self.admit(head.graph, now=self.now)
-                head.last_clock = self.now
-            else:
-                self._place_and_clock(head)
-            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
-                                                        self.now)
-            placed_any = True
-        self._update_hol()
-        return placed_any
-
-    def _place_and_clock(self, job: SchedJob) -> None:
-        """Admit + derive departure times from the queueing simulator."""
-        self.admit(job.graph, now=self.now)
-        job.last_clock = self.now
-        if self.reclock:
-            # one warm simulate keys the new job AND re-keys every other
-            # live job under the arrival's added contention
-            self._reclock_fleet()
-            return
-        # stale-clock baseline: key this job once, never revisit the rest
-        res = self._sim.simulate(self._live_graphs(), self.placement)
-        duration = max(res.job_finish[job.job_id], 1e-9)
-        job.msg_wait = res.per_job_wait[job.job_id]
-        job.sim_finish = duration
-        job.departure = self.now + duration
-        self._last_res = res
-        self._sample_mutation(res)
-        self.events.push(Event(time=job.departure, kind=DEPARTURE,
-                               job_id=job.job_id, epoch=job.epoch))
-
-    # -- joint batched admission (DESIGN.md §13) --------------------------------
-    def _domain_sizes(self):
-        if not hasattr(self, "_domain_sizes_cache"):
-            from ..search.moves import domain_sizes
-            self._domain_sizes_cache = domain_sizes(self.cluster)
-        return self._domain_sizes_cache
-
-    def _select_batch(self) -> list[SchedJob]:
-        """The admission batch: the FIFO prefix plus bounded look-ahead
-        backfill — scan at most ``admission_lookahead`` queued jobs and
-        take every one that still fits the remaining free budget. A job
-        is only ever skipped because it does not fit, so backfill cannot
-        starve the head (it keeps its budget claim)."""
-        budget = self.tracker.total_free()
-        batch: list[SchedJob] = []
-        for jid in list(self.pending)[:self.admission_lookahead]:
-            job = self.jobs[jid]
-            if job.graph.n_procs <= budget:
-                batch.append(job)
-                budget -= job.graph.n_procs
-        return batch
-
-    def _admit_batch(self) -> bool:
-        """Place the admission batch jointly (§13): route jobs to cells,
-        generate K joint placements per cell group and commit the best
-        by one warm ``simulate_batch`` against the full live set. Jobs
-        whose group does not fit stay queued (in order) and retry at the
-        next capacity event or window close. Returns whether anything
-        was placed; the caller re-clocks."""
-        batch = self._select_batch()
-        if not batch:
-            self._update_hol()
-            return False
-        self.metrics.counter("sched.joint_batches").inc()
-        placed: set = set()
-        if self.n_cells == 1:
-            placed |= self._place_batch_jointly(None, batch)
-        else:
-            # route with decremented budgets so one cell is never handed
-            # more batch jobs than it has free cores
-            remaining = {c.cell_id: c.total_free() for c in self.cells}
-            groups: dict[int, list[SchedJob]] = {}
-            for job in batch:
-                cell = self._route_cell(job.graph, remaining)
-                cid = GLOBAL_CELL if cell is None else cell.cell_id
-                if cell is not None:
-                    remaining[cid] -= job.graph.n_procs
-                groups.setdefault(cid, []).append(job)
-            # spanning placements first (GLOBAL_CELL sorts lowest): they
-            # claim cores across cells, and each cell group re-checks
-            # fit when its own candidates are generated
-            for cid in sorted(groups):
-                jobs = groups[cid]
-                if cid == GLOBAL_CELL:
-                    for job in jobs:
-                        try:
-                            self.admit(job.graph, now=self.now)
-                        except RuntimeError:
-                            continue    # stays queued — retry later
-                        job.last_clock = self.now
-                        placed.add(job.job_id)
-                else:
-                    placed |= self._place_batch_jointly(self.cells[cid],
-                                                        jobs)
-        if placed:
-            self.pending = deque(j for j in self.pending
-                                 if j not in placed)
-            self.metrics.counter("sched.joint_admitted").inc(len(placed))
-            self.metrics.gauge("sched.queue_depth").set(len(self.pending),
-                                                        self.now)
-        self._update_hol()
-        return bool(placed)
-
-    def _place_batch_jointly(self, cell: Optional[FleetCell],
-                             jobs: list[SchedJob]) -> set:
-        """Commit one cell group of the admission batch (§13).
-
-        K joint candidates (portfolio seeds x per-job strategy draws x
-        batch-restricted search moves, ``repro.search.joint``) are scored
-        in a single warm ``simulate_batch`` against the live set they
-        will contend with — THE fix for the admission-in-isolation
-        regression: the objective is the projected total wait of
-        everyone, not the arrival's own wait in an empty room."""
-        from ..search.joint import joint_candidates
-
-        graphs = [j.graph for j in jobs]
-        tracker = self.tracker if cell is None else cell.tracker
-        # a non-one-shot configured strategy (e.g. search:new) joins the
-        # candidate pool as an extra whole-batch seed — its isolation-
-        # scored placement is judged jointly like every other candidate
-        extra = None if self.strategy_name in ONE_SHOT_STRATEGIES \
-            else self._strategy
-        prefer = self.strategy_name \
-            if self.strategy_name in ONE_SHOT_STRATEGIES else "new"
-        cands = joint_candidates(graphs, self.cluster, tracker.free_mask(),
-                                 self._admission_rng, self.admission_k,
-                                 sizes=self._domain_sizes(), extra=extra,
-                                 prefer=prefer)
-        if not cands:
-            return set()        # group does not fit — stays queued
-        if cell is None:
-            live_jobs = list(self.live.values())
-            sim = self._sim
-        else:
-            live_jobs = [self.live[jid] for jid in sorted(cell.live)]
-            sim = cell.sim
-        live_graphs = [j.graph for j in live_jobs] + graphs
-        trials = []
-        for cand in cands:
-            trial = self.placement.copy()
-            for jid, cores in cand.items():
-                trial.assign(jid, cores)
-            trials.append(trial)
-        scored = sim.simulate_batch(live_graphs, trials)
-        # remaining-work-weighted wait: the clock accrues each job's
-        # projected wait in proportion to the work it still does under
-        # this contention, so a placement is judged by the wait it
-        # inflicts on work that remains — not by re-counting the full
-        # wait of jobs that are nearly done
-        weight = {j.job_id: max(1.0 - j.work_done, 0.0) for j in live_jobs}
-
-        def _score(r) -> float:
-            return sum(w * weight.get(jid, 1.0)
-                       for jid, w in r.per_job_wait.items())
-
-        if scored[0].max_server_utilisation < self.util_threshold:
-            # seed-placed fleet is not contended: projected margins
-            # between candidates are noise about a future the simulate
-            # cannot see — trust the contention-robust mapper (the same
-            # threshold that gates remap passes gates deviation here)
-            best_i = 0
-        else:
-            best_i = min(range(len(scored)),
-                         key=lambda i: (_score(scored[i]), i))
-        cand = cands[best_i]
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("admit_batch", track="events",
-                        jobs=[j.job_id for j in jobs],
-                        n_candidates=len(cands),
-                        cell=cell.cell_id if cell is not None else 0,
-                        total_wait=scored[best_i].total_wait)
-        for job in jobs:
-            if rec.enabled:
-                rec.instant("queue_drain", track="events", job=job.job_id,
-                            queue_wait=self.now - job.arrival,
-                            depth=len(self.pending))
-            self.admit(job.graph, now=self.now, cores=cand[job.job_id])
-            job.last_clock = self.now
-        return {j.job_id for j in jobs}
-
-    # -- head-of-line accounting (§13 satellite) --------------------------------
-    def _accrue_hol(self) -> None:
-        """Close the open HOL-blocked interval into the counter."""
-        if self._hol_since is None:
-            return
-        dt = self.now - self._hol_since
-        if dt > 0.0 and self._hol_free > 0:
-            self.metrics.counter("sched.hol_blocked").inc(
-                dt * self._hol_free)
-        self._hol_since = None
-
-    def _update_hol(self) -> None:
-        """Re-arm the head-of-line meter after a queue/capacity change:
-        an interval is HOL-blocked when the FIFO head does not fit the
-        free pool but some later queued job would — the free cores the
-        strict FIFO leaves idle, integrated as core-seconds."""
-        self._accrue_hol()
-        if not self.pending:
-            return
-        free = self.tracker.total_free()
-        if free <= 0 or self.jobs[self.pending[0]].graph.n_procs <= free:
-            return      # head fits (or nothing free): not HOL blocking
-        if any(self.jobs[jid].graph.n_procs <= free
-               for jid in self.pending):
-            self._hol_since = self.now
-            self._hol_free = free
-
-    # -- failure engine (DESIGN.md §12) -----------------------------------------
-    def _node_cores(self, node: int) -> np.ndarray:
-        cpn = self.cluster.cores_per_node
-        return np.arange(node * cpn, (node + 1) * cpn, dtype=np.int64)
-
-    def _jobs_on_node(self, node: int) -> list[int]:
-        # served by the incremental node->jobs index (updated on every
-        # admit / evict / depart / remap-commit / shrink; validated in
-        # check_invariants) — the old per-call scan touched every live
-        # job's core array on every fault-path query
-        return sorted(self._node_jobs[node])
-
-    def _handle_node_fail(self, ev: Event) -> None:
-        node = ev.node
-        if not self.monitor.alive[node]:
-            return      # overlapping injector windows — already down
-        self.monitor.mark_dead(node)
-        self._node_down_at[node] = self.now
-        self.draining.pop(node, None)   # a failure overrides a drain
-        self.tracker.set_offline(self._node_cores(node))
-        self._cell_set_offline(node)
-        self.metrics.counter("fault.node_failures").inc()
-        affected = self._jobs_on_node(node)
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("node_fail", track="faults", node=node,
-                        affected=affected,
-                        pending_departures=self.events.count(DEPARTURE))
-        for jid in affected:
-            self._fail_job(jid, reason="node_fail")
-        # killed jobs released their surviving cores — the FIFO head
-        # (including the restarts just queued) may fit right now
-        placed_any = self._drain_pending()
-        self._reclock_fleet()
-        if affected or placed_any:
-            self._maybe_schedule_remap()
-
-    def _handle_node_recover(self, ev: Event) -> None:
-        node = ev.node
-        was_draining = self.draining.pop(node, None) is not None
-        if self.monitor.alive[node] and not was_draining:
-            return      # duplicate recover (overlapping injector windows)
-        self.monitor.revive(node)
-        self.tracker.set_online(self._node_cores(node))
-        self._cell_set_online(node)
-        self.metrics.counter("fault.node_recoveries").inc()
-        down_at = self._node_down_at.pop(node, None)
-        if down_at is not None:
-            self.metrics.histogram("fault.node_downtime_s").observe(
-                self.now - down_at)
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("node_recover", track="faults", node=node,
-                        down_s=(self.now - down_at) if down_at is not None
-                        else 0.0, cancelled_drain=was_draining,
-                        pending_departures=self.events.count(DEPARTURE))
-        placed_any = self._drain_pending()
-        if placed_any:
-            self._reclock_fleet()
-            self._maybe_schedule_remap()
-
-    def _handle_drain(self, ev: Event) -> None:
-        node = ev.node
-        if ev.epoch:
-            # the deadline tick we scheduled at drain start; the
-            # generation guard kills ticks whose drain was cancelled by
-            # a failure/recover (and any tick of a superseded drain)
-            if node in self.draining \
-                    and ev.epoch == self._drain_gen.get(node):
-                self._drain_deadline(node)
-            return
-        if node in self.draining or not self.monitor.alive[node]:
-            return      # duplicate start / node already down
-        gen = self._drain_gen.get(node, 0) + 1
-        self._drain_gen[node] = gen
-        self.draining[node] = ev.deadline
-        # draining cores leave the schedulable pool immediately; jobs
-        # already on the node keep running until migrated or killed
-        self.tracker.set_offline(self._node_cores(node))
-        self._cell_set_offline(node)
-        self.metrics.counter("fault.drains").inc()
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("drain_begin", track="faults", node=node,
-                        deadline=ev.deadline, policy=self.drain_policy,
-                        resident=self._jobs_on_node(node),
-                        pending_departures=self.events.count(DEPARTURE))
-        if self.drain_policy == "proactive":
-            self._evacuate(node)
-        if ev.deadline <= ev.time:
-            self._drain_deadline(node)
-        else:
-            self.events.push(Event(time=ev.deadline, kind=DRAIN, node=node,
-                                   deadline=ev.deadline, epoch=gen))
-
-    def _drain_deadline(self, node: int) -> None:
-        """Drain grace expired: hard-kill whatever still holds the node
-        and put it into its maintenance window (NODE_RECOVER ends it)."""
-        del self.draining[node]
-        victims = self._jobs_on_node(node)
-        self.monitor.mark_dead(node)
-        self._node_down_at[node] = self.now
-        self.metrics.counter("fault.drain_kills").inc(len(victims))
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("drain_deadline", track="faults", node=node,
-                        killed=victims)
-        for jid in victims:
-            job = self.live[jid]
-            # deadline kills are always hard restarts — elastic shrink is
-            # a failure response; a drained node's procs are not "dead",
-            # the whole job must vacate
-            self._requeue(job, self._rollback(job), reason="drain_deadline")
-        placed_any = self._drain_pending()
-        self._reclock_fleet()
-        if victims or placed_any:
-            self._maybe_schedule_remap()
-
-    def _fail_job(self, jid: int, reason: str) -> None:
-        """One job lost cores to a dead node: roll back to its last
-        checkpoint, then shrink (elastic policy, when possible) or
-        requeue-restart."""
-        job = self.live[jid]
-        kept_work = self._rollback(job)
-        if self.failure_policy == "elastic" \
-                and self._elastic_shrink(job, kept_work):
-            return
-        self._requeue(job, kept_work, reason)
-
-    def _rollback(self, job: SchedJob) -> float:
-        """Checkpoint rollback: books the lost work and returns the work
-        fraction that survives (progress at the last checkpoint)."""
-        progress_s = max(job.work_done, 0.0) * job.sim_finish
-        lost_s = self.ckpt.lost_work(progress_s)
-        job.lost_work_s += lost_s
-        self.metrics.counter("fault.lost_work_s").inc(lost_s)
-        # the goodput ledger credited this work as it accrued — take the
-        # discarded tail back out
-        self._useful_core_s -= lost_s * job.graph.n_procs
-        if job.sim_finish <= 0.0:
-            return 0.0
-        return (progress_s - lost_s) / job.sim_finish
-
-    def _evict(self, jid: int, reason: str) -> SchedJob:
-        """Remove a live job without crediting completion: cores go back
-        to the pool (offline ones stay unschedulable), any in-flight
-        departure event goes stale via the epoch bump."""
-        job = self.live.pop(jid)
-        cores = self.placement.remove(jid)
-        self.tracker.release_cores(cores)
-        self._cell_release(cores)
-        self._index_remove(jid, cores)
-        self._unbind_job_cell(jid, cores, job.graph)
-        job.cores = None
-        job.epoch += 1
-        job.departure = None
-        job.sim_finish = 0.0
-        job.wait_proj = 0.0
-        self._last_res = None
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("evict", track="faults", job=jid, reason=reason)
-        return job
-
-    def _requeue(self, job: SchedJob, kept_work: float, reason: str) -> None:
-        """Requeue-restart: kill the job and re-admit it through the FIFO
-        tail, carrying its checkpointed progress and a restore-traffic
-        work debt (state re-read through the NIC at re-placement)."""
-        self._evict(job.job_id, reason)
-        job.work_done = kept_work
-        job.restart_debt_s = self.ckpt.restore_seconds(
-            job.state_bytes_per_proc * job.graph.n_procs,
-            self.cluster.nic_bw)
-        job.n_restarts += 1
-        self._kill_time[job.job_id] = self.now
-        self.pending.append(job.job_id)
-        self.metrics.counter("fault.restarts").inc()
-        self.metrics.gauge("sched.queue_depth").set(len(self.pending),
-                                                    self.now)
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("requeue_restart", track="faults", job=job.job_id,
-                        reason=reason, kept_work=kept_work,
-                        restore_debt_s=job.restart_debt_s,
-                        depth=len(self.pending))
-
-    def _elastic_shrink(self, job: SchedJob, kept_work: float) -> bool:
-        """Elastic-shrink recovery: shed the dead node's procs and re-place
-        the survivors' shrunk CTG with the admission strategy (the paper's
-        mapper on the degraded cluster). Returns False when the job cannot
-        shrink — no survivors, no power-of-two slice, or the survivors do
-        not fit — and the caller falls back to requeue-restart.
-
-        Modeling choice: ``work_done`` is a fraction of the job, so the
-        checkpointed fraction carries over to the shrunk configuration
-        and the remaining work is re-priced by the next re-clock under
-        the shrunk CTG's contention.
-        """
-        graph = job.graph
-        survivors = np.flatnonzero(
-            self.monitor.alive[self.cluster.node_of(job.cores)])
-        if survivors.size == 0:
-            return False
-        plan = ElasticReMesher(model_size=self.elastic_model_size,
-                               chips_per_host=1).replan(survivors.tolist())
-        usable = plan.data_size * plan.model_size
-        if usable < 1:
-            return False
-        # chips_per_host=1 makes replan's chip list the survivor ranks
-        # themselves; device_order indexes that list (surviving ranks)
-        kept_ranks = survivors[plan.device_order]
-        sub = np.sort(kept_ranks)
-        shrunk = AppGraph(name=f"{graph.name}~{usable}",
-                          L=graph.L[np.ix_(sub, sub)].copy(),
-                          lam=graph.lam[np.ix_(sub, sub)].copy(),
-                          cnt=graph.cnt[np.ix_(sub, sub)].copy(),
-                          job_id=graph.job_id)
-        snap = self.tracker.snapshot()
-        self.tracker.release_cores(job.cores)
-        try:
-            local = self._strategy([shrunk], self.cluster, self.tracker)
-        except RuntimeError:
-            self.tracker.restore(snap)
-            return False
-        new_cores = local.assignments[job.job_id]
-        self.placement.remove(job.job_id)
-        self.placement.assign(job.job_id, new_cores)
-        # sync the cell views and the node index (the strategy already
-        # settled the global tracker via the release/claim above)
-        self._cell_release(job.cores)
-        self._cell_claim(new_cores)
-        self._index_remove(job.job_id, job.cores)
-        self._index_add(job.job_id, new_cores)
-        self._unbind_job_cell(job.job_id, job.cores, graph)
-        self._bind_job_cell(job.job_id, new_cores, shrunk)
-        job.graph = shrunk          # new object: the warm-sim delta path
-        # keys on graph identity, so the swap is a clean remove+add
-        job.cores = new_cores
-        job.placed_at = self.now    # new stint
-        job.epoch += 1              # old departure events are stale
-        job.departure = None
-        job.work_done = kept_work
-        job.restart_debt_s = self.ckpt.restore_seconds(
-            job.state_bytes_per_proc * shrunk.n_procs, self.cluster.nic_bw)
-        job.n_restarts += 1
-        job.last_clock = self.now
-        self._last_res = None
-        self.metrics.counter("fault.shrinks").inc()
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("elastic_shrink", track="faults", job=job.job_id,
-                        procs_from=graph.n_procs, procs_to=usable,
-                        dropped=plan.dropped_chips,
-                        restore_debt_s=job.restart_debt_s)
-        return True
-
-    def _evacuate(self, node: int) -> None:
-        """Proactive drain: migrate jobs off ``node`` before the deadline.
-
-        Each resident job is re-placed by the admission strategy against
-        the free pool (the node's cores are offline, so candidates cannot
-        land back on it) and scored through the same warm
-        ``simulate_batch`` path the remap search uses; the move commits
-        regardless of profitability — the alternative at the deadline is
-        losing the job's uncheckpointed work — with migration bytes
-        booked as work debt through the normal remap bookkeeping. Jobs
-        that do not fit stay put: the evacuation is retried after every
-        departure, and whatever remains at the deadline is hard-killed.
-        """
-        affected = self._jobs_on_node(node)
-        if not affected:
-            return
-        live = self._live_graphs()
-        res = self._last_res
-        if res is None:
-            res = self._sim.simulate(live, self.placement)
-            self._last_res = res
-        for jid in affected:
-            candidates = self._reseed_candidates([jid], 1)
-            if not candidates:
-                continue        # no room yet — retry on the next departure
-            _, entry = self._evaluate_candidates(live, res, candidates)
-            if entry is None:   # pragma: no cover - single candidate scored
-                continue
-            self._record_decision(entry, committed=True)
-            self._commit_remap(entry)
-            self.metrics.counter("fault.evacuations").inc()
-            rec = self.recorder
-            if rec.enabled:
-                rec.instant("drain_evacuate", track="faults", job=jid,
-                            node=node,
-                            deadline=self.draining.get(node, 0.0))
-            live = self._live_graphs()
-            res = self._last_res    # _commit_remap re-clocked from res_new
-
-    # -- contention-aware remap -----------------------------------------------
-    def _maybe_schedule_remap(self) -> None:
-        if self.remap_interval is None or self._remap_scheduled:
-            return
-        # only worth ticking while jobs are live or still queued/arriving
-        if self.live or self.pending or self._arrivals_pending:
-            self.events.push(Event(time=self.now + self.remap_interval,
-                                   kind=REMAP))
-            self._remap_scheduled = True
-
-    def _remap_pass(self) -> None:
-        """Re-place contended jobs when projected utilisation is over
-        threshold AND the wait reduction pays for the migration.
-
-        Default mode: up to ``remap_candidates`` trial moves (the
-        most-contended live jobs, each re-placed into the current free
-        pool) are scored in ONE ``simulate_batch`` call — on the JAX
-        backend that is a single batched scan, so K candidates cost about
-        as much as one. The best net-gain candidate is committed if
-        profitable. With ``remap_budget`` set, the fixed candidate list
-        becomes a budgeted population search (:meth:`_remap_search`).
-        """
-        if len(self.live) < 2:
-            return
-        if self.n_cells > 1 and not self._n_spanning:
-            # sharded fleet with no cross-cell couplings: each cell runs
-            # its own pass against its own warm handle and tracker view
-            for cell in self.cells:
-                self._remap_pass_cell(cell)
-            return
-        live = self._live_graphs()
-        # the fleet is unchanged since the last re-clock on most remap
-        # ticks — reuse its SimResult (sampled by _sample_mutation at the
-        # mutation) rather than re-simulating; when it IS missing (stale
-        # mode after a departure) the fresh simulate is tick-driven, not
-        # mutation-driven, so it deliberately takes no utilisation sample
-        res = self._last_res
-        if res is None:
-            res = self._sim.simulate(live, self.placement)
-            self._last_res = res
-        if res.max_server_utilisation < self.util_threshold:
-            return
-        if self.remap_budget:
-            self._remap_search(live, res)
-            return
-        movable = self._movable_jobs(res)
-        if not movable:
-            return
-        candidates = self._reseed_candidates(movable, self.remap_candidates)
-        if not candidates:
-            return
-        best, best_any = self._evaluate_candidates(live, res, candidates)
-        commit = best is not None
-        self._record_decision(best if commit else best_any, commit)
-        if commit:
-            self._commit_remap(best)
-
-    def _remap_pass_cell(self, cell: FleetCell) -> None:
-        """One cell's remap pass: identical policy to the global pass,
-        but contention, candidates and the commit re-key all stay inside
-        the cell (its tracker view cannot propose out-of-cell cores)."""
-        if len(cell.live) < 2:
-            return
-        jobs = [self.live[jid] for jid in sorted(cell.live)]
-        live = [j.graph for j in jobs]
-        res = cell.last_res
-        if res is None:
-            res = cell.sim.simulate(live, self.placement)
-            cell.last_res = res
-        if res.max_server_utilisation < self.util_threshold:
-            return
-        movable = self._movable_jobs(res)
-        if not movable:
-            return
-        candidates = self._reseed_candidates(movable, self.remap_candidates,
-                                             tracker=cell.tracker)
-        if not candidates:
-            return
-        best, best_any = self._evaluate_candidates(live, res, candidates,
-                                                   sim=cell.sim)
-        commit = best is not None
-        self._record_decision(best if commit else best_any, commit)
-        if commit:
-            self._commit_remap(best, cell=cell)
-
-    def _remap_search(self, live: list[AppGraph], res) -> None:
-        """Budgeted population search over the live placement (§10).
-
-        Each round builds a population — strategy reseeds of the most
-        contended jobs plus random single-job swap / migrate / subtree
-        moves from ``repro.search.moves`` — and scores it in one warm
-        ``simulate_batch`` (the ``SimHandle`` delta path, so the honest
-        clock's wall-time gate is unaffected). The best profitable move
-        is committed through the normal migration-cost bookkeeping and
-        the next round hill-climbs from the post-commit fleet, until the
-        evaluation budget is spent or no move pays for its migration.
-        """
-        from ..search.moves import SearchState, domain_sizes, neighbours
-
-        sizes = domain_sizes(self.cluster)
-        evals = 0
-        committed = 0
-        while evals < self.remap_budget:
-            movable = self._movable_jobs(res)
-            if not movable:
-                break
-            k = min(self.remap_population, self.remap_budget - evals)
-            candidates = self._reseed_candidates(movable, max(1, k // 4))
-            state = SearchState(
-                self.cluster,
-                {jid: j.cores.copy() for jid, j in self.live.items()},
-                self.tracker.free_mask())
-            for move, nxt in neighbours(self._remap_rng, state,
-                                        k - len(candidates), jobs=movable,
-                                        allow_cross_job=False, sizes=sizes):
-                jid = int(move.detail[0])
-                candidates.append((jid, nxt.assignments[jid]))
-            if not candidates:
-                break
-            evals += len(candidates)
-            best, best_any = self._evaluate_candidates(live, res, candidates)
-            if best is None:
-                if committed == 0 and best_any is not None:
-                    self._record_decision(best_any, committed=False)
-                break
-            self._record_decision(best, committed=True)
-            self._commit_remap(best)
-            committed += 1
-            res = best[8]      # the committed candidate IS the new baseline
-
-    def _record_decision(self, entry, committed: bool) -> None:
-        """Book one remap verdict: decision record, counter, trace event
-        (commit/reject with the savings-vs-migration-cost breakdown)."""
-        self.decisions.append(RemapDecision(
-            time=self.now, job_id=entry[1], wait_gain=entry[7],
-            bytes_moved=entry[5], migration_time=entry[6],
-            committed=committed))
-        self.metrics.counter("sched.remap_commits" if committed
-                             else "sched.remap_rejects").inc()
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("remap_commit" if committed else "remap_reject",
-                        track="remap", job=entry[1], net_gain=entry[0],
-                        wait_gain=entry[7], bytes_moved=entry[5],
-                        migration_time=entry[6], procs_moved=entry[4])
-
-    def _movable_jobs(self, res) -> list[int]:
-        """Live jobs under their migration budget, most-contended first."""
-        movable = [j for j in res.per_job_wait
-                   if self.live[j].n_migrations < self.max_migrations_per_job]
-        movable.sort(key=lambda j: (res.per_job_wait[j], j), reverse=True)
-        return movable
-
-    def _reseed_candidates(self, movable: list[int], k: int,
-                           tracker: Optional[FreeCoreTracker] = None
-                           ) -> list[tuple[int, np.ndarray]]:
-        """Trial re-placements: each of the top-k contended jobs re-run
-        through the admission strategy against the current free pool
-        (``tracker`` scopes the pool to one cell's view)."""
-        tracker = self.tracker if tracker is None else tracker
-        snap = tracker.snapshot()
-        candidates: list[tuple[int, np.ndarray]] = []
-        for jid in movable[:k]:
-            job = self.live[jid]
-            tracker.release_cores(job.cores)
-            try:
-                local = self._strategy([job.graph], self.cluster,
-                                       tracker)
-            except RuntimeError:
-                continue
-            finally:
-                tracker.restore(snap)
-            candidates.append((jid, local.assignments[jid]))
-        return candidates
-
-    def _evaluate_candidates(self, live: list[AppGraph], res,
-                             candidates: list[tuple[int, np.ndarray]],
-                             sim: Optional[SimHandle] = None):
-        """Score single-job trial moves in one warm ``simulate_batch``.
-
-        Returns ``(best, best_any)`` entries — best committable (actual
-        move, gain pays the migration) and best overall (recorded as the
-        reject decision when nothing commits).
-        """
-        rec = self.recorder
-        if rec.enabled:
-            rec.instant("remap_propose", track="remap",
-                        n_candidates=len(candidates),
-                        jobs=sorted({jid for jid, _ in candidates}),
-                        peak_util=res.max_server_utilisation)
-        self.metrics.counter("sched.remap_evals").inc(len(candidates))
-        trials = []
-        for jid, new_cores in candidates:
-            trial = self.placement.copy()
-            trial.assign(jid, new_cores)
-            trials.append(trial)
-        scored = (self._sim if sim is None else sim).simulate_batch(
-            live, trials)
-        # price the migration stall in the same currency as the gain:
-        # ``gain`` is projected wait-seconds saved over the live set's
-        # remaining horizon, ``migration_time`` is wall seconds — so a
-        # second of stall costs the fleet its current wait-accrual rate
-        # (clamped at 1.0 so the rule is never weaker than the raw
-        # seconds comparison the tests pin)
-        horizon = max(res.job_finish.values(), default=0.0)
-        wait_rate = max(res.total_wait / max(horizon, 1e-9), 1.0)
-        best = None        # best committable candidate (actual moves only)
-        best_any = None    # best overall, recorded when nothing commits
-        for (jid, new_cores), res_new in zip(candidates, scored):
-            job = self.live[jid]
-            moved = int((self.cluster.node_of(new_cores)
-                         != self.cluster.node_of(job.cores)).sum())
-            bytes_moved = moved * job.state_bytes_per_proc
-            migration_time = bytes_moved / self.cluster.nic_bw
-            gain = res.total_wait - res_new.total_wait
-            cost = migration_time * self.migration_cost_factor * wait_rate
-            net = gain - cost
-            entry = (net, jid, job.cores, new_cores, moved, bytes_moved,
-                     migration_time, gain, res_new)
-            if best_any is None or net > best_any[0]:
-                best_any = entry
-            committable = moved > 0 and gain > cost
-            if committable and (best is None or net > best[0]):
-                best = entry
-        return best, best_any
-
-    def _commit_remap(self, entry, cell: Optional[FleetCell] = None) -> None:
-        """Apply one scored move: claim cores, book migration cost, re-key.
-
-        ``cell`` scopes the re-key to one cell when the candidate was
-        scored by that cell's handle (per-cell remap passes); the global
-        path re-keys the whole fleet from the scored result as before."""
-        (_, worst_id, old_cores, new_cores, moved, bytes_moved,
-         migration_time, gain, res_new) = entry
-        job = self.live[worst_id]
-        self.tracker.release_cores(old_cores)
-        self.tracker.take_cores(new_cores)
-        self._cell_release(old_cores)
-        self._cell_claim(new_cores)
-        self.placement.assign(worst_id, new_cores)
-        self._index_remove(worst_id, old_cores)
-        self._index_add(worst_id, new_cores)
-        self._unbind_job_cell(worst_id, old_cores, job.graph)
-        self._bind_job_cell(worst_id, new_cores, job.graph)
-        job.cores = new_cores
-        job.n_migrations += 1
-        job.migrated_bytes += bytes_moved
-        if self.reclock:
-            # migration stalls the job while its state crosses the NIC:
-            # book the transfer as work debt so the re-key below (and any
-            # later re-clock) carries it as (1 - work_done) * sim_finish
-            job.work_done -= migration_time \
-                / max(res_new.job_finish[worst_id], 1e-9)
-            # re-key EVERYONE the scored result covers, straight from the
-            # already-scored committed candidate (one batched scan paid
-            # for it — no extra simulate here); the post-remap peak
-            # utilisation is sampled inside the re-clock
-            if cell is not None and self.n_cells > 1:
-                self._dirty_cells.discard(cell.cell_id)
-                self._reclock_cell(cell, res=res_new)
-            else:
-                self._reclock(res=res_new)
-            return
-        # stale-clock baseline: record post-remap utilisation, refresh the
-        # projected waits so committed gains (and collateral damage) show
-        # up in the final metrics, and shift only the migrated job
-        self._last_res = res_new
-        self._sample_mutation(res_new)
-        for jid, w in res_new.per_job_wait.items():
-            self.live[jid].msg_wait = w
-        if job.departure is not None:
-            # moving state over the NIC delays the job; re-key its departure
-            job.departure += migration_time
-            job.epoch += 1
-            self.events.push(Event(time=job.departure, kind=DEPARTURE,
-                                   job_id=worst_id, epoch=job.epoch))
-
-    # -- introspection ------------------------------------------------------------
+    # -- introspection -------------------------------------------------------
     def _live_graphs(self) -> list[AppGraph]:
         return [j.graph for j in self.live.values()]
 
     def _sample_mutation(self, res) -> None:
         """THE utilisation-sampling hook (DESIGN.md §11).
 
-        Every post-mutation simulate result lands here exactly once —
-        from the admit/drain/depart/remap-commit re-clock, the
-        stale-mode placement path, and the stale-mode remap commit — and
-        from nowhere else. The sampled statistics (``peak_sim_util``,
-        ``nic_p99_util``, ``level_p99_util``) therefore weight every
-        fleet mutation uniformly: a remap-heavy run takes exactly as
-        many samples per mutation as an admit-only one, where the old
-        per-event-tick sampling oversampled whenever remap ticks fired
-        on an unchanged fleet.
+        Every post-mutation simulate result lands here exactly once and
+        nowhere else, so the sampled percentiles weight every fleet
+        mutation uniformly regardless of how often remap ticks fire.
         """
         self.metrics.histogram("sched.peak_sim_util").observe(
             res.max_server_utilisation)
@@ -1826,9 +558,8 @@ class FleetScheduler:
                                  "mean": float(nic.mean())}, ts=self.now)
 
     def _invariant(self, msg: str) -> None:
-        """Raise :class:`SchedulerInvariantError` carrying the flight
-        recorder's event tail — the timeline that led to the violation —
-        when tracing is on (exception note on py3.11+, stderr before)."""
+        """Raise :class:`SchedulerInvariantError`, attaching the flight
+        recorder's event tail when tracing is on."""
         err = SchedulerInvariantError(msg)
         rec = self.recorder
         if rec.enabled:
@@ -1886,53 +617,19 @@ class FleetScheduler:
             bad = [n for n in range(self.cluster.n_nodes)
                    if expect_idx[n] != self._node_jobs[n]]
             self._invariant(f"node->jobs index drift on nodes {bad}")
-        # cell views tile the global tracker (§13): in-cell used/offline
-        # bits mirror it exactly, out-of-cell cores are pinned offline,
-        # and the cells' core ranges partition the cluster
+        # cell-fabric tiling + binding invariants (§13/§14) live with
+        # the fabric itself
         if self.n_cells > 1:
-            covered = np.zeros(self.cluster.n_cores, dtype=bool)
-            for cell in self.cells:
-                in_cell = np.zeros(self.cluster.n_cores, dtype=bool)
-                in_cell[cell.cores] = True
-                if covered[in_cell].any():
-                    self._invariant(f"cell {cell.cell_id} overlaps another")
-                covered |= in_cell
-                if not np.array_equal(cell.tracker.used[in_cell],
-                                      self.tracker.used[in_cell]):
-                    self._invariant(
-                        f"cell {cell.cell_id} used-mask drift")
-                if not np.array_equal(cell.tracker.offline[in_cell],
-                                      self.tracker.offline[in_cell]):
-                    self._invariant(
-                        f"cell {cell.cell_id} offline-mask drift")
-                if not cell.tracker.offline[~in_cell].all():
-                    self._invariant(
-                        f"cell {cell.cell_id} sees out-of-cell cores")
-            if not covered.all():
-                self._invariant("cells do not cover the cluster")
-            # job->cell binding consistent with actual core residency
-            n_span = 0
-            for jid, job in self.live.items():
-                cids = self._cells_of_cores(job.cores)
-                cid = self._job_cell.get(jid)
-                if cids.size > 1:
-                    n_span += 1
-                    if cid != GLOBAL_CELL:
-                        self._invariant(
-                            f"job {jid} spans cells but bound to {cid}")
-                elif cid != int(cids[0]):
-                    self._invariant(
-                        f"job {jid} in cell {int(cids[0])} bound to {cid}")
-            if n_span != self._n_spanning:
-                self._invariant(
-                    f"spanning count drift: {n_span} != {self._n_spanning}")
+            self.fabric.check_tiling(self.live, self.tracker,
+                                     self._invariant)
 
     def stats(self) -> FleetStats:
-        if self._hol_since is not None:
+        adm = self.admission
+        if adm.hol_since is not None:
             # fold the open HOL-blocked interval into the counter, then
             # re-arm so a mid-run stats() call does not lose the tail
-            self._accrue_hol()
-            self._hol_since = self.now
+            adm.accrue_hol()
+            adm.hol_since = self.now
         finished = [j for j in self.jobs.values() if j.departure is not None]
         placed = [j for j in self.jobs.values() if j.placed_at is not None]
         peak_hist = self.metrics.histogram("sched.peak_sim_util")
@@ -1948,8 +645,9 @@ class FleetScheduler:
             level_p99[level] = s.percentile(99)
             sample_counts[f"level.{level}"] = s.n
         mttr = self.metrics.histogram("fault.mttr")
-        goodput = (max(self._useful_core_s, 0.0) / self._alloc_core_s
-                   if self._alloc_core_s > 0.0 else 1.0)
+        goodput = (max(self.clock.useful_core_s, 0.0)
+                   / self.clock.alloc_core_s
+                   if self.clock.alloc_core_s > 0.0 else 1.0)
         return FleetStats(
             n_jobs=len(self.jobs),
             makespan=max((j.departure for j in finished), default=0.0),
@@ -1974,8 +672,8 @@ class FleetScheduler:
             level_p99_util=level_p99,
             sample_counts=sample_counts,
             goodput=goodput,
-            useful_core_s=self._useful_core_s,
-            alloc_core_s=self._alloc_core_s,
+            useful_core_s=self.clock.useful_core_s,
+            alloc_core_s=self.clock.alloc_core_s,
             lost_work_s=self.metrics.counter("fault.lost_work_s").total,
             mttr_mean=(sum(mttr.samples) / mttr.n) if mttr.n else 0.0,
             n_node_failures=self.metrics.counter("fault.node_failures").n,
@@ -1995,4 +693,6 @@ class FleetScheduler:
             n_spanning_jobs=self.metrics.counter("sched.spanning_jobs").n,
             n_cell_escalations=self.metrics.counter(
                 "sched.cell_escalations").n,
+            n_cross_cell_migrations=self.metrics.counter(
+                "sched.cross_cell_migrations").n,
         )

@@ -140,6 +140,45 @@ def fleet64_trace(rate: float = 1.0, n_arrivals: int = 32,
     )
 
 
+def fleet1k_cluster(oversub: float = 4.0,
+                    node_bw: float = 1e9) -> ClusterTopology:
+    """1,024 nodes × 8 cores in 256 racks of 4 nodes, 16 pods of 16 racks.
+
+    The 1k-node testbed the nested cell fabric (DESIGN.md §13/§14) is
+    sized for: a rack cell holds 4 nodes / 32 cores (any single-rack job
+    in the oversub mix fits), a pod owns 16 racks / 512 cores (every
+    rack-spanning job fits a pod), so escalation past the pod layer is
+    reserved for genuinely fleet-wide couplings.
+    """
+    rack_bw = 4 * node_bw / oversub
+    hier = NetworkHierarchy([
+        NetLevel("node", fan_in=8, bw=node_bw, latency=100e-9),
+        NetLevel("rack", fan_in=4, bw=rack_bw, latency=300e-9),
+        NetLevel("pod", fan_in=16, bw=rack_bw, latency=1e-6),
+    ])
+    return ClusterTopology(n_nodes=1024, sockets_per_node=2,
+                           cores_per_socket=4, nic_bw=node_bw,
+                           hierarchy=hier)
+
+
+def fleet1k_trace(rate: float = 16.0, n_arrivals: int = 2048,
+                  seed: int = 0, oversub: float = 4.0) -> TraceSpec:
+    """The 1k-node benchmark stream (~100k scheduler events at the
+    default size: each of the 2,048 jobs costs an arrival + admission +
+    departure plus the superseded departure events its neighbours'
+    re-keys leave in the heap). ``sched_bench --quick`` runs a trimmed
+    ``n_arrivals`` so the CI gate stays fast; the defaults here are the
+    full-scale row."""
+    return TraceSpec(
+        name="fleet1k",
+        cluster=fleet1k_cluster(oversub=oversub),
+        arrivals=poisson_trace(rack_oversub_mix(), rate, n_arrivals,
+                               seed=seed),
+        count_scale=0.02,
+        state_bytes_per_proc=64 * MB,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Serving-fleet trace — configs/ model jobs on a TPU fleet
 # ---------------------------------------------------------------------------
@@ -294,6 +333,7 @@ TRACES: dict[str, Callable[..., TraceSpec]] = {
     "serve_fleet": lambda **kw: serve_fleet_trace(**kw),
     "rack_oversub": lambda **kw: rack_oversub_trace(**kw),
     "fleet64": lambda **kw: fleet64_trace(**kw),
+    "fleet1k": lambda **kw: fleet1k_trace(**kw),
 }
 
 

@@ -1,0 +1,343 @@
+"""Layered-scheduler tests (DESIGN.md §14).
+
+Three contracts of the FleetScheduler decomposition:
+
+1. **Standalone subsystems** — ``sched.clock`` / ``sched.admission`` /
+   ``sched.remap`` / ``sched.recovery`` / ``sched.cells`` are importable
+   and usable on their own against the thin facade.
+2. **Byte-identity** — the refactored facade replays the committed
+   sequential goldens bit-for-bit (``admission_window=0, cells=1``).
+3. **New seams** — nested ``"pod/rack"`` cells (one-level-at-a-time
+   escalation) and cross-cell migration in the remap pass, both
+   validated under ``check_invariants`` after every event.
+
+Plus the shared stale-event helper's property tests against BOTH of its
+call sites (departure job epochs; drain generation epochs).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned image lacks hypothesis — deterministic fallback
+    from repro.testing import given, settings, strategies as st
+
+from repro.core.workloads import rack_oversub_mix
+from repro.sched import (FleetScheduler, get_trace, stale_event)
+from repro.sched.admission import AdmissionController
+from repro.sched.cells import GLOBAL_CELL, build_cells
+from repro.sched.clock import WorkClock
+from repro.sched.recovery import RecoveryEngine
+from repro.sched.remap import RemapEngine
+from repro.sched.traces import fleet64_cluster
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+import regen_sched_golden as regen  # noqa: E402
+
+GOLDEN_PATH = regen.GOLDEN
+
+
+# ---------------------------------------------------------------------------
+# satellite: the ONE stale-event predicate, property-tested per call site
+# ---------------------------------------------------------------------------
+@given(epoch=st.integers(0, 50), job_epoch=st.integers(0, 50),
+       alive=st.sampled_from([True, False]))
+@settings(max_examples=60)
+def test_stale_event_matches_departure_site(epoch, job_epoch, alive):
+    """Departure site: an event is stale iff the job departed or its
+    epoch was bumped past the event's — the exact predicate the event
+    loop used before the helper was extracted."""
+    live_epoch = job_epoch if alive else None
+    legacy = (not alive) or (epoch != job_epoch)
+    assert stale_event(epoch, live_epoch) == legacy
+
+
+@given(epoch=st.integers(0, 50), gen=st.integers(0, 50),
+       draining=st.sampled_from([True, False]),
+       has_gen=st.sampled_from([True, False]))
+@settings(max_examples=60)
+def test_stale_event_matches_drain_site(epoch, gen, draining, has_gen):
+    """Drain site: a deadline tick fires iff its node is still draining
+    AND the tick belongs to the node's current drain generation."""
+    drain_gen = {7: gen} if has_gen else {}
+    live_gen = drain_gen.get(7) if draining else None
+    legacy_fires = draining and epoch == drain_gen.get(7)
+    assert (not stale_event(epoch, live_gen)) == legacy_fires
+
+
+def test_stale_departure_events_are_skipped():
+    """Integration: a re-key bumps the job epoch, so the superseded
+    departure event must fall through without mutating the fleet."""
+    spec = get_trace("table4_poisson", seed=0, n_arrivals=6)
+    sched = FleetScheduler(spec.cluster, "new",
+                          count_scale=spec.count_scale,
+                          state_bytes_per_proc=spec.state_bytes_per_proc)
+    sched.submit_trace(spec.arrivals)
+    stats = sched.run()
+    sched.check_invariants()
+    # every job departed exactly once despite the re-clock leaving up to
+    # one superseded departure event per job per mutation in the heap
+    assert stats.n_jobs == 6
+    assert all(v["departure"] is not None for v in stats.per_job.values())
+
+
+# ---------------------------------------------------------------------------
+# standalone subsystems
+# ---------------------------------------------------------------------------
+def _mini_sched(**kw):
+    spec = get_trace("table4_poisson", seed=0, n_arrivals=4)
+    sched = FleetScheduler(spec.cluster, "new",
+                          count_scale=spec.count_scale,
+                          state_bytes_per_proc=spec.state_bytes_per_proc,
+                          **kw)
+    return spec, sched
+
+
+def test_engine_modules_respect_layering():
+    """The four engine modules import only the leaf siblings and the
+    foundation packages — never each other or the facade. Runs the
+    AST-based lint the CI job uses (benchmarks/check_layering.py)."""
+    script = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "check_layering.py")
+    proc = subprocess.run([sys.executable, script],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_workclock_standalone():
+    spec, sched = _mini_sched()
+    clock = sched.clock
+    assert isinstance(clock, WorkClock)
+    for a in spec.arrivals[:2]:
+        sched.admit(a.graph, now=0.0)
+    clock.reclock()
+    assert all(j.departure is not None and j.sim_finish > 0
+               for j in sched.live.values())
+    sched.now = 1.0
+    clock.advance()
+    assert clock.alloc_core_s > 0
+    assert all(j.work_done > 0 for j in sched.live.values())
+    sched.check_invariants()
+
+
+def test_admission_controller_standalone():
+    with pytest.raises(ValueError, match="admission_window"):
+        _mini_sched(admission_window=-1.0)
+    with pytest.raises(ValueError, match="reclock"):
+        _mini_sched(admission_window=1.0, reclock=False)
+    spec, sched = _mini_sched(admission_window=0.5)
+    assert isinstance(sched.admission, AdmissionController)
+    sched.submit_trace(spec.arrivals)
+    stats = sched.run()
+    sched.check_invariants()
+    assert stats.n_joint_batches >= 1
+    assert stats.n_joint_admitted >= 1
+
+
+def test_remap_engine_standalone():
+    spec, sched = _mini_sched(remap_interval=2.0, util_threshold=0.0,
+                              migration_cost_factor=0.0)
+    assert isinstance(sched.remap, RemapEngine)
+    for a in spec.arrivals[:3]:
+        sched.admit(a.graph, now=0.0)
+    sched.clock.reclock()
+    sched.remap.run_pass()
+    sched.check_invariants()
+    assert sched.decisions, "zero-threshold pass must at least score moves"
+    assert sched.decisions is sched.remap.decisions  # facade view
+
+
+def test_recovery_engine_standalone():
+    with pytest.raises(ValueError, match="failure_policy"):
+        _mini_sched(failure_policy="nope")
+    with pytest.raises(ValueError, match="drain_policy"):
+        _mini_sched(drain_policy="nope")
+    spec, sched = _mini_sched()
+    assert isinstance(sched.recovery, RecoveryEngine)
+    job = sched.admit(spec.arrivals[0].graph, now=0.0)
+    sched.clock.reclock()
+    node = int(sched.cluster.node_of(job.cores)[0])
+    sched.recovery.monitor.mark_dead(node)
+    sched.tracker.set_offline(sched._node_cores(node))
+    sched.recovery.fail_job(job.job_id, reason="node_fail")
+    assert job.job_id not in sched.live
+    assert job.job_id in sched.pending  # requeued at the tail
+    sched.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# byte-identity through the layered facade
+# ---------------------------------------------------------------------------
+def test_layered_facade_replays_sequential_golden():
+    """The decomposed scheduler IS the sequential scheduler at
+    ``admission_window=0, cells=1`` — bit-identical golden replay.
+    (test_joint_admission covers all scenarios; this pins the fastest
+    one to THIS suite so a layering regression fails close to home.)"""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    name, trace_kw, sched_kw, faults = regen.SCENARIOS[0]
+    got = regen.run_scenario(trace_kw, sched_kw, faults,
+                             admission_window=0.0, cells=1)
+    assert got == golden[name]
+
+
+# ---------------------------------------------------------------------------
+# nested pod-of-rack cells
+# ---------------------------------------------------------------------------
+def test_build_cells_nested_topology():
+    cluster = fleet64_cluster()
+    cells = build_cells(cluster, "pod/rack", count_scale=0.02,
+                        backend="segmented")
+    leaves = [c for c in cells if not c.children]
+    parents = [c for c in cells if c.children]
+    assert len(leaves) == 16 and len(parents) == 4
+    for leaf in leaves:
+        assert leaf.parent is not None
+        parent = cells[leaf.parent]
+        assert leaf.cell_id in parent.children
+        assert set(leaf.nodes) <= set(parent.nodes)
+    for parent in parents:
+        got = sorted(n for cid in parent.children for n in cells[cid].nodes)
+        assert got == sorted(parent.nodes)
+
+
+def test_build_cells_rejects_bad_nesting():
+    cluster = fleet64_cluster()
+    with pytest.raises(ValueError):
+        build_cells(cluster, "rack/pod", count_scale=0.02,
+                    backend="segmented")  # parent must be the coarser level
+    with pytest.raises(ValueError):
+        build_cells(cluster, "pod/rack/node", count_scale=0.02,
+                    backend="segmented")  # two levels only
+
+
+def test_nested_cells_end_to_end():
+    """fleet64 under ``cells="pod/rack"``: 16 leaf racks + 4 pod parents,
+    rack-spanning jobs bind to their pod (not GLOBAL), escalation walks
+    one level at a time, and every event preserves the invariants."""
+    spec = get_trace("fleet64", n_arrivals=24, seed=0)
+    sched = FleetScheduler(spec.cluster, "new", cells="pod/rack",
+                          count_scale=spec.count_scale,
+                          state_bytes_per_proc=spec.state_bytes_per_proc,
+                          admission_window=0.5)
+    assert sched.n_cells == 20
+    assert len(sched.fabric.leaves) == 16
+    assert len(sched.fabric.parents) == 4
+    sched.submit_trace(spec.arrivals)
+    saw_pod_bound = False
+    while sched.step() is not None:
+        sched.check_invariants()
+        saw_pod_bound |= any(
+            cid >= 16 and cid != GLOBAL_CELL
+            for cid in sched.fabric.job_cell.values())
+    stats = sched.stats()
+    assert stats.n_jobs == 24
+    assert all(v["departure"] is not None for v in stats.per_job.values())
+    # the trace's 48-proc jobs exceed one 32-core rack but fit a pod:
+    # they must have bound to the pod layer rather than coupling the fleet
+    assert saw_pod_bound
+    assert stats.n_cell_escalations > 0
+
+
+def test_nested_matches_flat_outcomes():
+    """Same trace, flat rack cells vs nested pod/rack: identical per-job
+    completion set (scheduling differs only in escalation granularity,
+    every job still departs exactly once)."""
+    spec = get_trace("fleet64", n_arrivals=16, seed=1)
+
+    def run(cells):
+        sched = FleetScheduler(spec.cluster, "new", cells=cells,
+                              count_scale=spec.count_scale,
+                              state_bytes_per_proc=spec.state_bytes_per_proc,
+                              admission_window=0.5)
+        sched.submit_trace(spec.arrivals)
+        stats = sched.run()
+        sched.check_invariants()
+        return stats
+
+    flat, nested = run("rack"), run("pod/rack")
+    assert set(flat.per_job) == set(nested.per_job)
+    assert all(v["departure"] is not None
+               for v in nested.per_job.values())
+
+
+# ---------------------------------------------------------------------------
+# cross-cell migration
+# ---------------------------------------------------------------------------
+def _packed_two_cells():
+    """Two racks packed solid (24+8 cores each), the rest empty — a
+    spanning-free imbalance the cross-cell pass must be able to relieve."""
+    mix = [g for g in rack_oversub_mix() if g.n_procs in (24, 8)]
+    cluster = fleet64_cluster()
+    sched = FleetScheduler(cluster, "new", cells="rack",
+                          remap_interval=2.0, util_threshold=0.05,
+                          migration_cost_factor=0.0)
+    jid = 0
+    for k in range(2):
+        for g in mix:
+            sched.admit(dataclasses.replace(g, job_id=jid),
+                        cell=sched.fabric.cells[k])
+            jid += 1
+    sched.clock.reclock_fleet()
+    return sched
+
+
+def test_cross_cell_migration_commits():
+    sched = _packed_two_cells()
+    assert sched.fabric.n_spanning == 0
+    before = dict(sched.fabric.job_cell)
+    sched.remap.run_pass()
+    sched.check_invariants()
+    stats = sched.stats()
+    assert stats.n_cross_cell_migrations == 1
+    moved = [j for j, c in sched.fabric.job_cell.items()
+             if before[j] != c]
+    assert len(moved) == 1
+    # the move left its source domain and was recorded as a commit
+    jid = moved[0]
+    assert sched.fabric.job_cell[jid] not in (before[jid], GLOBAL_CELL)
+    assert sched.live[jid].n_migrations == 1
+    assert any(d.committed and d.job_id == jid for d in sched.decisions)
+
+
+def test_cross_cell_migration_gate():
+    """``cross_cell_migration=False`` pins jobs to their admission cell."""
+    sched = _packed_two_cells()
+    sched.cross_cell_migration = False
+    before = dict(sched.fabric.job_cell)
+    sched.remap.run_pass()
+    sched.check_invariants()
+    assert sched.fabric.job_cell == before
+    assert sched.stats().n_cross_cell_migrations == 0
+
+
+def test_cross_cell_migration_priced():
+    """An overwhelming migration price must reject the same move the
+    zero-cost pass commits — the existing migration-cost currency."""
+    sched = _packed_two_cells()
+    sched.migration_cost_factor = 1e9
+    before = dict(sched.fabric.job_cell)
+    sched.remap.run_pass()
+    sched.check_invariants()
+    assert sched.fabric.job_cell == before
+    assert sched.stats().n_cross_cell_migrations == 0
+
+
+def test_admit_explicit_cell_rollback():
+    """A cell too fragmented for the strategy must roll its tracker view
+    back before the global fallback (no leaked partial claims)."""
+    mix = [g for g in rack_oversub_mix() if g.n_procs in (24, 16)]
+    cluster = fleet64_cluster()
+    sched = FleetScheduler(cluster, "new", cells="rack")
+    cell = sched.fabric.cells[0]
+    sched.admit(dataclasses.replace(mix[0], job_id=0), cell=cell)  # 24/32
+    sched.check_invariants()
+    # 16 cores cannot fit the 8 left in cell 0 -> global fallback
+    job = sched.admit(dataclasses.replace(mix[1], job_id=1), cell=cell)
+    sched.check_invariants()
+    assert job.job_id in sched.live
