@@ -1,17 +1,18 @@
 #!/usr/bin/env python
 """Import-layering lint for the decomposed scheduler (DESIGN.md §14).
 
-The FleetScheduler facade owns all cross-subsystem routing: the four
+The FleetScheduler facade owns all cross-subsystem routing: the five
 engine modules — ``sched.clock`` / ``sched.admission`` / ``sched.remap``
-/ ``sched.recovery`` — must stay peers. This lint fails (exit 1) if any
-of them imports another engine, the ``scheduler`` facade, or anything
-outside the allowed foundations:
+/ ``sched.recovery`` / ``sched.autoscale`` — must stay peers. This lint
+fails (exit 1) if any of them imports another engine, the ``scheduler``
+facade, or anything outside the allowed foundations:
 
 * sibling leaf modules: ``repro.sched.events`` / ``repro.sched.cells``
-  / ``repro.sched.loads`` (pure data structures + views, no engine
-  logic);
+  / ``repro.sched.loads`` / ``repro.sched.config`` (pure data
+  structures + views, no engine logic);
 * foundation packages: ``repro.core`` / ``repro.obs`` /
-  ``repro.search`` / ``repro.ckpt``;
+  ``repro.search`` / ``repro.ckpt`` / ``repro.serve`` (the serving
+  layer is queueing math + traffic streams, no scheduler logic);
 * the stdlib and numpy.
 
 The walk is AST-based (covers function-local imports too), so it needs
@@ -28,10 +29,11 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHED = os.path.join(REPO, "src", "repro", "sched")
 
-ENGINES = ("clock", "admission", "remap", "recovery")
-LEAF_SIBLINGS = {"events", "cells", "loads"}
-FOUNDATIONS = {"core", "obs", "search", "ckpt"}
-STDLIB_OK = {"__future__", "collections", "dataclasses", "typing", "numpy"}
+ENGINES = ("clock", "admission", "remap", "recovery", "autoscale")
+LEAF_SIBLINGS = {"events", "cells", "loads", "config"}
+FOUNDATIONS = {"core", "obs", "search", "ckpt", "serve"}
+STDLIB_OK = {"__future__", "collections", "dataclasses", "math", "typing",
+             "numpy"}
 
 
 def _resolve(module: str, node: ast.ImportFrom | ast.Import,

@@ -48,8 +48,9 @@ import json
 import sys
 import time
 
-from repro.sched import (FleetScheduler, TRACES, fault_trace, get_trace,
-                         reference_fault_trace)
+from repro.sched import (FleetScheduler, RecoveryConfig, SchedulerConfig,
+                         fault_trace, get_trace, reference_fault_trace,
+                         trace_names)
 
 POLICIES = (
     ("requeue_kill", "requeue", "kill"),
@@ -65,10 +66,11 @@ def run_policy(trace_name: str, failure_policy: str, drain_policy: str, *,
     spec = get_trace(trace_name, seed=seed)
     sched = FleetScheduler(
         spec.cluster, strategy,
-        count_scale=spec.count_scale,
-        state_bytes_per_proc=spec.state_bytes_per_proc,
-        failure_policy=failure_policy,
-        drain_policy=drain_policy)
+        config=SchedulerConfig(
+            recovery=RecoveryConfig(failure_policy=failure_policy,
+                                    drain_policy=drain_policy),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc))
     sched.submit_trace(spec.arrivals)
     if faults is not None:
         sched.submit_faults(faults)
@@ -223,7 +225,7 @@ def _print_table(report: dict) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="table4_poisson",
-                    choices=sorted(TRACES), help="named arrival trace")
+                    choices=trace_names(), help="named arrival trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: reference trace + gates, no MTBF sweep")

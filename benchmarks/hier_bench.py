@@ -23,7 +23,8 @@ import json
 import sys
 
 from repro import obs
-from repro.sched import FleetScheduler, get_trace
+from repro.sched import (FleetScheduler, RemapConfig, SchedulerConfig,
+                         get_trace)
 
 STRATEGIES = ("blocked", "cyclic", "drb", "new", "recursive_bisect")
 
@@ -38,10 +39,11 @@ def run_ratio(oversub: float, strategies=STRATEGIES, *, n_arrivals: int = 24,
                          n_arrivals=n_arrivals, oversub=oversub)
         sched = FleetScheduler(
             spec.cluster, strategy,
-            remap_interval=remap_interval,
-            state_bytes_per_proc=spec.state_bytes_per_proc,
-            count_scale=spec.count_scale,
-            sim_backend=sim_backend)
+            config=SchedulerConfig(
+                remap=RemapConfig(interval=remap_interval),
+                state_bytes_per_proc=spec.state_bytes_per_proc,
+                count_scale=spec.count_scale,
+                sim_backend=sim_backend))
         sched.submit_trace(spec.arrivals)
         stats = sched.run()
         sched.check_invariants()

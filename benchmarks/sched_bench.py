@@ -47,7 +47,9 @@ import time
 
 from repro import obs
 from repro.obs import export as obs_export
-from repro.sched import FleetScheduler, TRACES, get_trace
+from repro.sched import (AdmissionConfig, CellConfig, FleetScheduler,
+                         RemapConfig, SchedulerConfig, get_trace,
+                         trace_names)
 
 DEFAULT_STRATEGIES = ("blocked", "cyclic", "drb", "new", "recursive_bisect")
 
@@ -79,14 +81,15 @@ def run_trace(trace_name: str, strategies=DEFAULT_STRATEGIES, *,
         count_scale = spec.count_scale
         sched = FleetScheduler(
             spec.cluster, strategy,
-            remap_interval=remap_interval,
-            util_threshold=util_threshold,
-            state_bytes_per_proc=spec.state_bytes_per_proc,
-            count_scale=spec.count_scale,
-            sim_backend=sim_backend,
-            reclock=reclock,
-            admission_window=admission_window,
-            cells=cells)
+            config=SchedulerConfig(
+                remap=RemapConfig(interval=remap_interval,
+                                  util_threshold=util_threshold),
+                admission=AdmissionConfig(window=admission_window),
+                cells=CellConfig(cells=cells),
+                state_bytes_per_proc=spec.state_bytes_per_proc,
+                count_scale=spec.count_scale,
+                sim_backend=sim_backend,
+                reclock=reclock))
         sched.submit_trace(spec.arrivals)
         t0 = time.perf_counter()
         stats = sched.run()
@@ -281,9 +284,12 @@ def measure_obs_overhead(trace_name: str = "table4_poisson", *,
     def once(recorder) -> float:
         spec = get_trace(trace_name, seed=seed, n_arrivals=n_arrivals)
         sched = FleetScheduler(
-            spec.cluster, "new", remap_interval=5.0,
-            state_bytes_per_proc=spec.state_bytes_per_proc,
-            count_scale=spec.count_scale, recorder=recorder)
+            spec.cluster, "new",
+            config=SchedulerConfig(
+                remap=RemapConfig(interval=5.0),
+                state_bytes_per_proc=spec.state_bytes_per_proc,
+                count_scale=spec.count_scale),
+            recorder=recorder)
         sched.submit_trace(spec.arrivals)
         t0 = time.perf_counter()
         sched.run()
@@ -379,7 +385,7 @@ def _print_table(report: dict) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="table4_poisson",
-                    choices=sorted(TRACES), help="named arrival trace")
+                    choices=trace_names(), help="named arrival trace")
     ap.add_argument("--trace", action="store_true",
                     help="record a structured flight-recorder trace of the "
                          "run (repro.obs, DESIGN.md §11)")

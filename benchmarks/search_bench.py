@@ -41,7 +41,7 @@ from repro.core.graphs import ClusterTopology
 from repro.core.mapping import ONE_SHOT_STRATEGIES, STRATEGIES, make_search_strategy
 from repro.core.meshplan import tpu_topology
 from repro.core.workloads import rack_oversub_mix, synt_workload_3
-from repro.sched import FleetScheduler, get_trace
+from repro.sched import FleetScheduler, SchedulerConfig, get_trace
 from repro.sched.traces import rack_oversub_cluster, serve_fleet_mix
 from repro.search import auto_objective_scale, objective_of, search_placement
 
@@ -227,9 +227,11 @@ def run_dynamic(
         sched = FleetScheduler(
             spec.cluster,
             cfg.pop("strategy"),
-            state_bytes_per_proc=spec.state_bytes_per_proc,
-            count_scale=spec.count_scale,
-            **cfg,
+            config=SchedulerConfig.from_legacy(
+                state_bytes_per_proc=spec.state_bytes_per_proc,
+                count_scale=spec.count_scale,
+                **cfg,
+            ),
         )
         sched.submit_trace(spec.arrivals)
         t0 = time.perf_counter()

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro import obs
 from repro.core.simulator import resolve_backend, simulate, simulate_batch
-from repro.sched import FleetScheduler, TRACES, get_trace
+from repro.sched import (FleetScheduler, SchedulerConfig, get_trace,
+                         trace_names)
 
 # agreement tolerance vs the loop baseline, per backend (f64 / f64 / f32)
 TOLERANCES = {"segmented": 1e-9, "jax": 1e-6, "pallas": 1e-3}
@@ -39,7 +40,8 @@ TOLERANCES = {"segmented": 1e-9, "jax": 1e-6, "pallas": 1e-3}
 def live_workload(trace_name: str, seed: int = 0):
     """Admit trace arrivals until the cluster is full — a live snapshot."""
     spec = get_trace(trace_name, seed=seed)
-    sched = FleetScheduler(spec.cluster, "new", count_scale=spec.count_scale)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        count_scale=spec.count_scale))
     for a in spec.arrivals:
         if a.graph.n_procs <= sched.tracker.total_free():
             sched.admit(a.graph)
@@ -177,7 +179,7 @@ def _gate(report: dict) -> list[str]:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="table4_poisson",
-                    choices=sorted(TRACES), help="named arrival trace")
+                    choices=trace_names(), help="named arrival trace")
     ap.add_argument("--trace", action="store_true",
                     help="record a flight-recorder trace of the measured "
                          "runs (repro.obs) to --trace-out")

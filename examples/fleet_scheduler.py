@@ -9,7 +9,8 @@ reduction pays for the migration bytes.
 
     PYTHONPATH=src python examples/fleet_scheduler.py
 """
-from repro.sched import FleetScheduler, get_trace
+from repro.sched import (FleetScheduler, RemapConfig, SchedulerConfig,
+                         get_trace)
 
 spec = get_trace("table4_poisson", n_arrivals=12, seed=0)
 print(f"cluster: {spec.cluster.n_nodes} nodes x "
@@ -17,9 +18,10 @@ print(f"cluster: {spec.cluster.n_nodes} nodes x "
 print(f"trace:   {len(spec.arrivals)} Poisson arrivals "
       f"(state to migrate: {spec.state_bytes_per_proc/2**20:.0f} MB/proc)\n")
 
-sched = FleetScheduler(spec.cluster, "new", remap_interval=5.0,
-                       state_bytes_per_proc=spec.state_bytes_per_proc,
-                       count_scale=spec.count_scale)
+sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+    remap=RemapConfig(interval=5.0),
+    state_bytes_per_proc=spec.state_bytes_per_proc,
+    count_scale=spec.count_scale))
 sched.submit_trace(spec.arrivals)
 stats = sched.run()
 sched.check_invariants()

@@ -21,7 +21,8 @@ import json
 
 from repro import obs
 from repro.obs.export import to_chrome
-from repro.sched import FleetScheduler, get_trace
+from repro.sched import (FleetScheduler, RemapConfig, SchedulerConfig,
+                         get_trace)
 
 spec = get_trace("rack_oversub", seed=0, rate=0.5, n_arrivals=12)
 print(f"cluster: {spec.cluster.n_nodes} nodes, rack uplinks 4x "
@@ -29,9 +30,10 @@ print(f"cluster: {spec.cluster.n_nodes} nodes, rack uplinks 4x "
 
 with obs.recording() as rec:
     rec.set_process("sched:new")
-    sched = FleetScheduler(spec.cluster, "new", remap_interval=5.0,
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           count_scale=spec.count_scale)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        remap=RemapConfig(interval=5.0),
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale))
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()

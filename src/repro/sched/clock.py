@@ -60,6 +60,11 @@ class SchedJob:
     #   the job's next re-key, exactly like a migration stall
     n_restarts: int = 0              # kills survived (requeue or shrink)
     lost_work_s: float = 0.0         # work discarded by checkpoint rollbacks
+    # -- serving-replica state (DESIGN.md §15) -----------------------------
+    resident: bool = False           # serving replica: never departs on its
+    #   own — re-clocks refresh its contention projection but push no
+    #   departure event; it leaves only via an explicit depart() (the
+    #   autoscale engine's drop-replica action) or the run horizon
 
     @property
     def queue_wait(self) -> float:
@@ -147,6 +152,10 @@ class WorkClock:
                 # (no-op float-compare when no fault ever touched the job)
                 job.work_done -= job.restart_debt_s / job.sim_finish
                 job.restart_debt_s = 0.0
+            if job.resident:
+                # serving replicas have no finite work to exhaust: keep
+                # the contention projection fresh, push no departure
+                continue
             departure = f.now \
                 + max(1.0 - job.work_done, 0.0) * job.sim_finish
             if job.departure is not None and abs(departure - job.departure) \

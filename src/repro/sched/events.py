@@ -1,6 +1,6 @@
 """Event machinery for the online fleet scheduler.
 
-A deliberately tiny discrete-event core: seven event kinds pushed onto a
+A deliberately tiny discrete-event core: eight event kinds pushed onto a
 single time-ordered heap. Ties are broken by a monotonically increasing
 sequence number, then by kind priority so that at equal timestamps the
 topology settles first (failures, then recoveries), departures free
@@ -23,15 +23,18 @@ NODE_FAIL = "node_fail"
 NODE_RECOVER = "node_recover"
 DRAIN = "drain"
 ADMIT = "admit"          # admission-window close: place the batch jointly
+TRAFFIC = "traffic"      # serving traffic-epoch tick (autoscale loop)
 
 # at equal timestamps: settle the topology (fail, then recover), release
-# cores, mark draining nodes unschedulable, then admit, then consider
-# remapping.  NODE_FAIL before DEPARTURE means a job departing at the
-# exact failure instant is killed, not credited — the conservative tie.
-# ADMIT after ARRIVAL so a window closing exactly when a job arrives
-# still sees that job in the batch.
+# cores, mark draining nodes unschedulable, then admit, then account the
+# traffic epoch, then consider remapping.  NODE_FAIL before DEPARTURE
+# means a job departing at the exact failure instant is killed, not
+# credited — the conservative tie.  ADMIT after ARRIVAL so a window
+# closing exactly when a job arrives still sees that job in the batch.
+# TRAFFIC after ADMIT so the autoscale tick observes a settled fleet,
+# and before REMAP so any replica it adds is visible to the remap pass.
 _KIND_PRIORITY = {NODE_FAIL: 0, NODE_RECOVER: 1, DEPARTURE: 2,
-                  DRAIN: 3, ARRIVAL: 4, ADMIT: 5, REMAP: 6}
+                  DRAIN: 3, ARRIVAL: 4, ADMIT: 5, TRAFFIC: 6, REMAP: 7}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +59,8 @@ class Event:
         """Compact one-line rendering for traces and flight dumps."""
         if self.kind in (REMAP, ADMIT):
             return f"t={self.time:g} {self.kind}"
+        if self.kind == TRAFFIC:
+            return f"t={self.time:g} traffic epoch={self.epoch}"
         if self.kind in (NODE_FAIL, NODE_RECOVER):
             return f"t={self.time:g} {self.kind} node={self.node}"
         if self.kind == DRAIN:

@@ -23,23 +23,29 @@ uniformly.
 from __future__ import annotations
 
 import sys
+import warnings
 from collections import deque
 from typing import Callable, Iterable, Optional, Union
 
 import numpy as np
 
 from .. import obs
-from ..ckpt.checkpoint import CheckpointCostModel
+from ..ckpt.checkpoint import CheckpointCostModel  # noqa: F401
+# ^ re-exported: the historical import surface of this module
 from ..core.graphs import (AppGraph, ClusterTopology, FreeCoreTracker,
                            Placement)
 from ..core.mapping import STRATEGIES
 from ..core.simulator import SimHandle, resolve_backend
 from ..core.workloads import Arrival
 from .admission import AdmissionController
+from .autoscale import AutoscaleDecision, AutoscaleEngine  # noqa: F401
 from .cells import CellFabric, FleetCell
 from .clock import SchedJob, WorkClock
+from .config import (AdmissionConfig, AutoscaleConfig, CellConfig,  # noqa: F401
+                     RecoveryConfig, RemapConfig, SchedulerConfig)
 from .events import (ADMIT, ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL,
-                     NODE_RECOVER, REMAP, Event, EventQueue, stale_event)
+                     NODE_RECOVER, REMAP, TRAFFIC, Event, EventQueue,
+                     stale_event)
 from .loads import projected_level_loads, projected_nic_loads  # noqa: F401
 # ^ re-exported: the historical import surface of this module
 from .recovery import RecoveryEngine
@@ -92,49 +98,55 @@ class FleetScheduler:
 
     def __init__(self, cluster: ClusterTopology,
                  strategy: StrategyLike = "new", *,
-                 remap_interval: Optional[float] = None,
-                 util_threshold: float = 0.75,
-                 migration_cost_factor: float = 1.0,
-                 max_migrations_per_job: int = 1,
-                 state_bytes_per_proc: float = 64 * MB,
-                 count_scale: float = 0.02,
-                 sim_backend: str = "auto",
-                 remap_candidates: int = 4,
-                 remap_budget: Optional[int] = None,
-                 remap_population: int = 16,
-                 remap_rng_seed: int = 0,
-                 reclock: bool = True,
+                 config: Optional[SchedulerConfig] = None,
                  recorder: Optional[obs.Recorder] = None,
-                 failure_policy: str = "requeue",
-                 drain_policy: str = "proactive",
-                 ckpt_model: Optional[CheckpointCostModel] = None,
-                 elastic_model_size: int = 1,
-                 admission_window: float = 0.0,
-                 admission_k: int = 24,
-                 admission_lookahead: int = 8,
-                 admission_rng_seed: int = 0,
-                 cells: Union[int, str] = 1,
-                 cross_cell_migration: bool = True):
+                 **legacy):
+        """``config`` groups every knob by owning subsystem (§15).
+
+        The historical flat kwargs (``remap_interval=5.0`` etc.) still
+        work as ``**legacy`` through :meth:`SchedulerConfig.from_legacy`
+        with a ``DeprecationWarning`` — they build the identical config,
+        so seeded runs replay byte-for-byte either way. Mixing ``config``
+        with flat kwargs is an error; unknown names raise ``TypeError``
+        exactly like the old signature did.
+        """
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config= or legacy flat kwargs, not both "
+                    f"(got {sorted(legacy)})")
+            warnings.warn(
+                "flat FleetScheduler kwargs are deprecated; compose a "
+                "SchedulerConfig instead (DESIGN.md §15)",
+                DeprecationWarning, stacklevel=2)
+            config = SchedulerConfig.from_legacy(**legacy)
+        elif config is None:
+            config = SchedulerConfig()
+        self.config = config
         self.cluster = cluster
         self.strategy_name = strategy if isinstance(strategy, str) else getattr(strategy, "__name__", "custom")
         self._strategy = resolve_strategy(strategy)
         self.tracker = FreeCoreTracker(cluster)
         self.placement = Placement(cluster)
-        self.remap_interval = remap_interval
-        self.util_threshold = util_threshold
-        self.migration_cost_factor = migration_cost_factor
-        self.max_migrations_per_job = max_migrations_per_job
-        self.state_bytes_per_proc = state_bytes_per_proc
-        self.count_scale = count_scale
-        self.sim_backend = resolve_backend(sim_backend)
-        self.remap_candidates = max(1, remap_candidates)
+        # the config is a frozen recipe; the facade copies it onto plain
+        # mutable attributes (tests steer a running scheduler through
+        # them, e.g. ``sched.remap_interval = 5.0``)
+        self.remap_interval = config.remap.interval
+        self.util_threshold = config.remap.util_threshold
+        self.migration_cost_factor = config.remap.migration_cost_factor
+        self.max_migrations_per_job = config.remap.max_migrations_per_job
+        self.state_bytes_per_proc = config.state_bytes_per_proc
+        self.count_scale = config.count_scale
+        self.sim_backend = resolve_backend(config.sim_backend)
+        self.remap_candidates = max(1, config.remap.candidates)
         # remap_budget switches the remap pass from fixed reseed trials
         # to the budgeted population search (DESIGN.md §10); the budget
         # caps placements scored per pass
-        self.remap_budget = remap_budget
-        self.remap_population = max(1, remap_population)
-        self.cross_cell_migration = cross_cell_migration
-        self.reclock = reclock
+        self.remap_budget = config.remap.budget
+        self.remap_population = max(1, config.remap.population)
+        self.cross_cell_migration = config.cells.cross_cell_migration
+        self.reclock = config.reclock
+        count_scale = config.count_scale
         # warm-start simulation handle: every projection below goes through
         # it so per-event cost is delta assembly + scans, not full rebuilds
         self._sim = SimHandle(cluster, count_scale=count_scale,
@@ -166,25 +178,33 @@ class FleetScheduler:
         # -- layered subsystems (DESIGN.md §14) ----------------------------
         self.clock = WorkClock(self)
         self.recovery = RecoveryEngine(
-            self, failure_policy=failure_policy, drain_policy=drain_policy,
-            ckpt_model=ckpt_model, elastic_model_size=elastic_model_size)
+            self, failure_policy=config.recovery.failure_policy,
+            drain_policy=config.recovery.drain_policy,
+            ckpt_model=config.recovery.ckpt_model,
+            elastic_model_size=config.recovery.elastic_model_size)
         self.admission = AdmissionController(
-            self, window=admission_window, k=admission_k,
-            lookahead=admission_lookahead, rng_seed=admission_rng_seed,
-            reclock=reclock)
-        self.remap = RemapEngine(self, rng_seed=remap_rng_seed)
+            self, window=config.admission.window, k=config.admission.k,
+            lookahead=config.admission.lookahead,
+            rng_seed=config.admission.rng_seed,
+            reclock=config.reclock)
+        self.remap = RemapEngine(self, rng_seed=config.remap.rng_seed)
+        self.autoscale = AutoscaleEngine(self, config.autoscale)
+        if self.autoscale.enabled and not config.reclock:
+            raise ValueError("autoscale requires reclock=True "
+                             "(replica projections re-key the fleet)")
         # incremental node -> resident job-ids index; replaces the
         # _jobs_on_node linear scan over the live set (updated on every
         # admit / evict / depart / remap-commit / shrink, validated by
         # check_invariants against a fresh scan)
         self._node_jobs: list[set] = [set() for _ in range(cluster.n_nodes)]
         # -- fleet cells (DESIGN.md §13) -----------------------------------
-        self.fabric = CellFabric(cluster, cells, count_scale=count_scale,
+        self.fabric = CellFabric(cluster, config.cells.cells,
+                                 count_scale=count_scale,
                                  backend=self.sim_backend,
                                  global_tracker=self.tracker,
                                  global_sim=self._sim,
                                  metrics=self.metrics)
-        if self.fabric.n_cells > 1 and not reclock:
+        if self.fabric.n_cells > 1 and not config.reclock:
             raise ValueError("cells > 1 requires reclock=True "
                              "(cell-local re-clocks)")
 
@@ -287,13 +307,16 @@ class FleetScheduler:
     def admit(self, graph: AppGraph, now: Optional[float] = None,
               state_bytes_per_proc: Optional[float] = None, *,
               cores: Optional[np.ndarray] = None,
-              cell: Optional[FleetCell] = None) -> SchedJob:
+              cell: Optional[FleetCell] = None,
+              resident: bool = False) -> SchedJob:
         """Place one job right now against the fragmented free pool.
 
         Raises ``RuntimeError`` if the job does not fit — callers that want
         queueing use :meth:`submit` + :meth:`run`. ``cores`` commits an
         externally chosen placement (the joint admission batch);
-        ``cell`` pins the placement to one cell's tracker view.
+        ``cell`` pins the placement to one cell's tracker view;
+        ``resident`` marks a serving replica that never departs on its
+        own (§15).
         """
         now = self.now if now is None else now
         if graph.n_procs > self.cluster.n_cores:
@@ -307,7 +330,8 @@ class FleetScheduler:
             job = SchedJob(job_id=graph.job_id, graph=graph, arrival=now,
                            state_bytes_per_proc=state_bytes_per_proc
                            if state_bytes_per_proc is not None
-                           else self.state_bytes_per_proc)
+                           else self.state_bytes_per_proc,
+                           resident=resident)
             self.jobs[job.job_id] = job
         if job.job_id in self.live:
             raise ValueError(f"job {job.job_id} already live")
@@ -391,8 +415,14 @@ class FleetScheduler:
 
     # -- high-level event API ------------------------------------------------
     def submit(self, graph: AppGraph, at: float = 0.0,
-               state_bytes_per_proc: Optional[float] = None) -> None:
-        """Enqueue a timestamped arrival for :meth:`run`."""
+               state_bytes_per_proc: Optional[float] = None, *,
+               resident: bool = False) -> None:
+        """Enqueue a timestamped arrival for :meth:`run`.
+
+        ``resident`` marks a serving replica (§15): it is placed like any
+        arrival but never departs on its own — only an autoscale
+        drop-replica action or the run horizon ends its residency.
+        """
         if graph.n_procs > self.cluster.n_cores:
             raise ValueError(f"job {graph.job_id} needs {graph.n_procs} cores; "
                              f"cluster has {self.cluster.n_cores}")
@@ -401,7 +431,8 @@ class FleetScheduler:
         self.jobs[graph.job_id] = SchedJob(
             job_id=graph.job_id, graph=graph, arrival=at,
             state_bytes_per_proc=state_bytes_per_proc
-            if state_bytes_per_proc is not None else self.state_bytes_per_proc)
+            if state_bytes_per_proc is not None else self.state_bytes_per_proc,
+            resident=resident)
         self.events.push(Event(time=at, kind=ARRIVAL, job_id=graph.job_id))
         self._arrivals_pending += 1
 
@@ -431,6 +462,22 @@ class FleetScheduler:
                                  f"{f.time}")
             self.events.push(Event(time=float(f.time), kind=f.kind,
                                    node=node, deadline=deadline))
+
+    def submit_traffic(self, stream) -> None:
+        """Enqueue a request stream's traffic-epoch ticks (§15).
+
+        ``stream`` is a ``repro.serve.RequestStream`` (or any object with
+        an ``epochs()`` method, or a plain epoch sequence). Each epoch
+        becomes one TRAFFIC event driving the autoscale closed loop;
+        requires ``AutoscaleConfig(enabled=True, slos=...)``.
+        """
+        if not self.autoscale.enabled:
+            raise ValueError("submit_traffic requires "
+                             "AutoscaleConfig(enabled=True) with slos")
+        epochs = stream.epochs() if hasattr(stream, "epochs") else list(stream)
+        self.autoscale.set_epochs(epochs)
+        for k, ep in enumerate(epochs):
+            self.events.push(Event(time=ep.time, kind=TRAFFIC, epoch=k))
 
     def step(self) -> Optional[Event]:
         """Pop and handle ONE event; ``None`` once the queue is drained.
@@ -471,21 +518,36 @@ class FleetScheduler:
             if self.admission.admit_batch():
                 self.clock.reclock_fleet()
                 self.remap.maybe_schedule()
+        elif ev.kind == TRAFFIC:
+            self.autoscale.on_traffic(ev)
         elif ev.kind == REMAP:
             self.remap.scheduled = False
             self._remap_pass()
             self.remap.maybe_schedule()
         return ev
 
-    def run(self) -> FleetStats:
+    def run(self, until: Optional[float] = None) -> FleetStats:
         """Play all events; returns aggregate fleet statistics.
+
+        ``until`` bounds the run to events at or before that time —
+        serving fleets need it because resident replicas never drain the
+        queue on their own; when autoscale is enabled it defaults to the
+        traffic stream's horizon. Batch runs (``until=None``, autoscale
+        off) drain the queue exactly as before.
 
         With a recorder active, any escaping exception carries the
         flight recorder's event tail as a note / stderr dump.
         """
+        if until is None and self.autoscale.enabled:
+            until = self.autoscale.horizon or None
         try:
-            while self.step() is not None:
-                pass
+            while True:
+                if until is not None:
+                    nxt = self.events.peek()
+                    if nxt is None or nxt.time > until:
+                        break
+                if self.step() is None:
+                    break
         except Exception as e:
             rec = self.recorder
             if rec.enabled and not isinstance(e, SchedulerInvariantError):
@@ -495,6 +557,12 @@ class FleetScheduler:
                 elif dump:                               # pragma: no cover
                     print(dump, file=sys.stderr)
             raise
+        if until is not None and self.now < until:
+            # settle the clock at the bound so resident replicas' work
+            # and wait integrals cover the full run window
+            self.now = until
+            if self.reclock:
+                self.clock.advance()
         return self.stats()
 
     def _handle_departure(self, ev: Event) -> None:
@@ -695,4 +763,12 @@ class FleetScheduler:
                 "sched.cell_escalations").n,
             n_cross_cell_migrations=self.metrics.counter(
                 "sched.cross_cell_migrations").n,
+            slo_violation_s=self.autoscale.acct.total_violation_s,
+            slo_violation_by_model=dict(self.autoscale.acct.violation_s),
+            n_scale_ups=self.metrics.counter("sched.scale_ups").n,
+            n_scale_downs=self.metrics.counter("sched.scale_downs").n,
+            n_autoscale_rejects=self.metrics.counter(
+                "sched.autoscale_rejects").n,
+            n_routing_shifts=int(self.metrics.counter(
+                "sched.routing_shifts").total),
         )

@@ -64,6 +64,13 @@ class FleetStats:
     n_spanning_jobs: int = 0         # placements that crossed cell borders
     n_cell_escalations: int = 0      # re-clocks escalated up a level
     n_cross_cell_migrations: int = 0  # whole-job moves between cells
+    # -- serving closed loop (DESIGN.md §15) -------------------------------
+    slo_violation_s: float = 0.0     # total p99-SLO-violation seconds
+    slo_violation_by_model: dict = dataclasses.field(default_factory=dict)
+    n_scale_ups: int = 0             # committed add-replica actions
+    n_scale_downs: int = 0           # committed drop-replica actions
+    n_autoscale_rejects: int = 0     # structural actions priced out
+    n_routing_shifts: int = 0        # routing-weight refreshes that moved
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

@@ -20,6 +20,8 @@ committed reference scenario the tests and ``fault_bench`` gate on.
 from __future__ import annotations
 
 import dataclasses
+import functools
+from types import MappingProxyType
 from typing import Callable
 
 import numpy as np
@@ -28,6 +30,7 @@ from ..core.graphs import AppGraph, ClusterTopology
 from ..core.hierarchy import NetLevel, NetworkHierarchy
 from ..core.workloads import (Arrival, poisson_trace, rack_oversub_mix,
                               table_poisson_trace, npb_poisson_trace)
+from ..serve.fleet import ModelSLO, RequestStream, TrafficSpike, clone_replica
 from .events import DRAIN, NODE_FAIL, NODE_RECOVER
 
 MB = 1 << 20
@@ -324,20 +327,114 @@ def reference_fault_trace(cluster: ClusterTopology,
     return events
 
 
-TRACES: dict[str, Callable[..., TraceSpec]] = {
-    "table2_poisson": lambda **kw: table_trace(2, **kw),
-    "table3_poisson": lambda **kw: table_trace(3, **kw),
-    "table4_poisson": lambda **kw: table_trace(4, **kw),
-    "table5_poisson": lambda **kw: table_trace(5, **kw),
-    "npb_poisson": lambda **kw: npb_trace(**kw),
-    "serve_fleet": lambda **kw: serve_fleet_trace(**kw),
-    "rack_oversub": lambda **kw: rack_oversub_trace(**kw),
-    "fleet64": lambda **kw: fleet64_trace(**kw),
-    "fleet1k": lambda **kw: fleet1k_trace(**kw),
+# ---------------------------------------------------------------------------
+# Serving-under-SLOs trace — the autoscale closed loop's scenario (§15)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeTraceSpec(TraceSpec):
+    """A serving scenario: resident replicas + a request stream + SLOs.
+
+    ``arrivals`` is empty — the workload is the offered request load,
+    not batch jobs. Runners submit every graph in ``replicas`` as a
+    resident job at t=0, hand ``stream`` to
+    ``FleetScheduler.submit_traffic``, and configure the autoscaler
+    with ``slos``.
+    """
+
+    replicas: tuple = ()     # AppGraph replicas resident from t=0
+    slos: tuple = ()         # ModelSLO per served model
+    stream: RequestStream = None
+
+
+# two models with opposite mesh shapes fight for the scarce rack uplinks;
+# 16 procs each so two replicas of both fill a quarter of the fleet
+_SERVE_SLO_MIX = (
+    ("qwen3-0.6b", "decode_32k", {"data": 4, "model": 4}),
+    ("mamba2-370m", "decode_32k", {"data": 8, "model": 2}),
+)
+
+
+def serve_slo_trace(seed: int = 0, horizon: float = 240.0,
+                    epoch_dt: float = 4.0, n_replicas: int = 2,
+                    oversub: float = 4.0) -> ServeTraceSpec:
+    """Bursty serving scenario on the oversubscribed-rack cluster.
+
+    Diurnal swell over the whole horizon plus a 3x spike on the qwen
+    model through the middle of it: at spike peak the initial
+    ``n_replicas`` are overloaded outright, and because the first racks
+    are already occupied, replicas added by the autoscaler spill onto
+    racks whose uplinks the other model's replicas contend for — the
+    placement-aware routing has real asymmetry to exploit.
+    """
+    from ..configs import get_config, SHAPES
+    from ..core.commgraph import appgraph_for
+
+    replicas: list[AppGraph] = []
+    slos: list[ModelSLO] = []
+    base_rates: dict = {}
+    jid = 0
+    for i, (arch, shape, axes) in enumerate(_SERVE_SLO_MIX):
+        template = appgraph_for(get_config(arch), SHAPES[shape], axes,
+                                job_id=0, steps_per_sec=4.0)
+        for _ in range(n_replicas):
+            replicas.append(clone_replica(template, jid))
+            jid += 1
+        slos.append(ModelSLO(model=template.name, p99_target_s=0.5,
+                             service_rate=100.0))
+        base_rates[template.name] = 60.0 if i == 0 else 40.0
+    spike = TrafficSpike(model=slos[0].model, start=0.4 * horizon,
+                         duration=0.25 * horizon, multiplier=3.0)
+    stream = RequestStream(base_rates, horizon, epoch_dt,
+                           diurnal_period=horizon, diurnal_amp=0.3,
+                           spikes=(spike,), seed=seed)
+    return ServeTraceSpec(
+        name="serve_slo",
+        cluster=rack_oversub_cluster(oversub=oversub),
+        arrivals=[],
+        count_scale=1.0,            # serve graphs carry per-step counts
+        state_bytes_per_proc=64 * MB,
+        replicas=tuple(replicas),
+        slos=tuple(slos),
+        stream=stream,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The trace registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[..., TraceSpec]] = {
+    "table2_poisson": functools.partial(table_trace, 2),
+    "table3_poisson": functools.partial(table_trace, 3),
+    "table4_poisson": functools.partial(table_trace, 4),
+    "table5_poisson": functools.partial(table_trace, 5),
+    "npb_poisson": npb_trace,
+    "serve_fleet": serve_fleet_trace,
+    "serve_slo": serve_slo_trace,
+    "rack_oversub": rack_oversub_trace,
+    "fleet64": fleet64_trace,
+    "fleet1k": fleet1k_trace,
 }
+
+# read-only view kept for the historical import surface (callers used to
+# reach into a bare module-level dict); new code goes through get_trace /
+# trace_names
+TRACES = MappingProxyType(_REGISTRY)
+
+
+def trace_names() -> list[str]:
+    """Sorted names of every registered trace."""
+    return sorted(_REGISTRY)
 
 
 def get_trace(name: str, **kwargs) -> TraceSpec:
-    if name not in TRACES:
-        raise KeyError(f"unknown trace {name!r}; known: {sorted(TRACES)}")
-    return TRACES[name](**kwargs)
+    """Build a registered trace by name.
+
+    Raises ``KeyError`` listing the known names (the same error contract
+    as :func:`repro.sched.scheduler.resolve_strategy`).
+    """
+    try:
+        builder = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown trace {name!r}; "
+                       f"known: {trace_names()}") from None
+    return builder(**kwargs)

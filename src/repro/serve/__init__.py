@@ -1,3 +1,26 @@
-from .engine import Request, ServeEngine
+"""Serving layer: the batched decode engine and the fleet closed loop.
 
-__all__ = ["Request", "ServeEngine"]
+``repro.serve.fleet`` (request streams, the SLO latency model, the
+violation accountant) is pure numpy and imported eagerly — the scheduler
+stack depends on it. ``repro.serve.engine`` pulls jax + the model zoo,
+so ``Request`` / ``ServeEngine`` resolve lazily on first attribute
+access; importing ``repro.serve`` (and therefore ``repro.sched``) stays
+jax-free.
+"""
+from .fleet import (LN100, ModelSLO, RequestStream, SLOAccountant,
+                    TrafficEpoch, TrafficSpike, clone_replica, fleet_p99s,
+                    model_key, replica_p99, route_weights)
+
+__all__ = [
+    "Request", "ServeEngine",
+    "LN100", "ModelSLO", "RequestStream", "SLOAccountant",
+    "TrafficEpoch", "TrafficSpike", "clone_replica", "fleet_p99s",
+    "model_key", "replica_p99", "route_weights",
+]
+
+
+def __getattr__(name: str):
+    if name in ("Request", "ServeEngine"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -13,6 +13,7 @@ agnostic — it only uses the Model decode surface.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Optional
 
 import jax
@@ -48,7 +49,9 @@ class ServeEngine:
         self.remaining = np.zeros(batch, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
-        self._queue: list[Request] = []
+        # deque: admission drains the head every tick — popleft is O(1)
+        # where list.pop(0) shifted the whole backlog
+        self._queue: deque[Request] = deque()
         self.ticks = 0
 
     # -- admission -----------------------------------------------------------
@@ -59,7 +62,7 @@ class ServeEngine:
         for slot in range(self.batch):
             if self.slots[slot] is not None or not self._queue:
                 continue
-            req = self._queue.pop(0)
+            req = self._queue.popleft()
             self._prefill_into_slot(slot, req)
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:

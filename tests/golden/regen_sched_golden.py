@@ -47,15 +47,19 @@ FIELDS = ("n_jobs", "makespan", "total_queue_wait", "total_msg_wait",
 
 def run_scenario(trace_kw: dict, sched_kw: dict, faults: bool,
                  **extra) -> dict:
-    from repro.sched import FleetScheduler, get_trace
+    from repro.sched import FleetScheduler, SchedulerConfig, get_trace
     from repro.sched.traces import reference_fault_trace
 
     kw = dict(trace_kw)
     spec = get_trace(kw.pop("name"), **kw)
-    sched = FleetScheduler(spec.cluster,
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           count_scale=spec.count_scale,
-                           **dict(sched_kw, **extra))
+    flat = dict(sched_kw, **extra)
+    strategy = flat.pop("strategy", "new")
+    # the scenario rows keep their historical flat-kwarg form; from_legacy
+    # is the pinned bridge (the config-vs-legacy golden test relies on it)
+    config = SchedulerConfig.from_legacy(
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale, **flat)
+    sched = FleetScheduler(spec.cluster, strategy, config=config)
     sched.submit_trace(spec.arrivals)
     if faults:
         sched.submit_faults(reference_fault_trace(spec.cluster))

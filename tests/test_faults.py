@@ -16,7 +16,8 @@ from repro.core import ClusterTopology, FreeCoreTracker
 from repro.core.graphs import AppGraph
 from repro.sched import (ARRIVAL, DEPARTURE, DRAIN, NODE_FAIL, NODE_RECOVER,
                          Event, EventQueue, FleetScheduler, NodeEvent,
-                         fault_trace, get_trace, reference_fault_trace)
+                         RecoveryConfig, SchedulerConfig, fault_trace,
+                         get_trace, reference_fault_trace)
 
 KB = 1 << 10
 MB = 1 << 20
@@ -29,11 +30,11 @@ def _job(job_id, procs=16, count=3000):
 
 def _run_reference(failure_policy, drain_policy, check=True):
     spec = get_trace("table4_poisson")
-    sched = FleetScheduler(spec.cluster, "new",
-                           count_scale=spec.count_scale,
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           failure_policy=failure_policy,
-                           drain_policy=drain_policy)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        recovery=RecoveryConfig(failure_policy=failure_policy,
+                                drain_policy=drain_policy),
+        count_scale=spec.count_scale,
+        state_bytes_per_proc=spec.state_bytes_per_proc))
     sched.submit_trace(spec.arrivals)
     sched.submit_faults(reference_fault_trace(spec.cluster))
     while sched.step():
@@ -163,11 +164,11 @@ def test_empty_fault_trace_is_bit_identical():
     """submit_faults([]) must not perturb a single departure."""
     def run(empty_faults):
         spec = get_trace("table4_poisson")
-        sched = FleetScheduler(spec.cluster, "new",
-                               count_scale=spec.count_scale,
-                               state_bytes_per_proc=spec.state_bytes_per_proc,
-                               failure_policy="requeue",
-                               drain_policy="proactive")
+        sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+            recovery=RecoveryConfig(failure_policy="requeue",
+                                    drain_policy="proactive"),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc))
         sched.submit_trace(spec.arrivals)
         if empty_faults:
             sched.submit_faults([])
@@ -189,11 +190,11 @@ def test_random_fault_traces_keep_invariants(seed):
                          node_mttr=8.0, rack_mtbf=90.0, n_drains=2,
                          drain_grace=5.0, maintenance_s=10.0, seed=seed)
     for failure_policy in ("requeue", "elastic"):
-        sched = FleetScheduler(spec.cluster, "new",
-                               count_scale=spec.count_scale,
-                               state_bytes_per_proc=spec.state_bytes_per_proc,
-                               failure_policy=failure_policy,
-                               drain_policy="proactive")
+        sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+            recovery=RecoveryConfig(failure_policy=failure_policy,
+                                    drain_policy="proactive"),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc))
         sched.submit_trace(spec.arrivals)
         sched.submit_faults(faults)
         while sched.step():
@@ -206,10 +207,10 @@ def test_random_fault_traces_keep_invariants(seed):
 # ---------------------------------------------------------------------------
 def _small_sched(**kw):
     cluster = ClusterTopology(n_nodes=2)          # 32 cores, 16 per node
-    return cluster, FleetScheduler(cluster, "new",
-                                   state_bytes_per_proc=1 * MB,
-                                   failure_policy="requeue",
-                                   drain_policy="kill", **kw)
+    return cluster, FleetScheduler(
+        cluster, "new", config=SchedulerConfig.from_legacy(
+            state_bytes_per_proc=1 * MB, failure_policy="requeue",
+            drain_policy="kill", **kw))
 
 
 def test_drain_deadline_kills_resident_job():
@@ -288,11 +289,11 @@ def test_seeded_failure_run_trace_dump_byte_identical():
     def dump():
         rec = obs.Recorder()
         spec = get_trace("table4_poisson")
-        sched = FleetScheduler(spec.cluster, "new",
-                               count_scale=spec.count_scale,
-                               state_bytes_per_proc=spec.state_bytes_per_proc,
-                               failure_policy="requeue",
-                               drain_policy="proactive", recorder=rec)
+        sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+            recovery=RecoveryConfig(failure_policy="requeue",
+                                    drain_policy="proactive"),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc), recorder=rec)
         sched.submit_trace(spec.arrivals)
         sched.submit_faults(reference_fault_trace(spec.cluster))
         sched.run()

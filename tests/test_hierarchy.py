@@ -182,14 +182,15 @@ def test_rb_beats_all_strategies_on_rack_oversub_trace():
     """Acceptance: on the rack_oversub trace, recursive_bisect has the
     lowest total message wait of all five strategies (short trace for
     test budget; benchmarks/hier_bench.py runs the full sweep)."""
-    from repro.sched import FleetScheduler, get_trace
+    from repro.sched import (FleetScheduler, RemapConfig, SchedulerConfig,
+                             get_trace)
     waits = {}
     for strategy in ("blocked", "cyclic", "drb", "new", "recursive_bisect"):
         spec = get_trace("rack_oversub", n_arrivals=12)
-        sched = FleetScheduler(spec.cluster, strategy,
-                               remap_interval=5.0,
-                               state_bytes_per_proc=spec.state_bytes_per_proc,
-                               count_scale=spec.count_scale)
+        sched = FleetScheduler(spec.cluster, strategy, config=SchedulerConfig(
+            remap=RemapConfig(interval=5.0),
+            state_bytes_per_proc=spec.state_bytes_per_proc,
+            count_scale=spec.count_scale))
         sched.submit_trace(spec.arrivals)
         waits[strategy] = sched.run().total_msg_wait
         sched.check_invariants()
@@ -200,9 +201,10 @@ def test_rb_beats_all_strategies_on_rack_oversub_trace():
 def test_rb_placement_valid_under_churn():
     """Admit/depart churn through the scheduler keeps rb placements and
     the free-core accounting consistent."""
-    from repro.sched import FleetScheduler
+    from repro.sched import FleetScheduler, SchedulerConfig
     cluster = _oversub_cluster()
-    sched = FleetScheduler(cluster, "recursive_bisect", count_scale=0.01)
+    sched = FleetScheduler(cluster, "recursive_bisect",
+                           config=SchedulerConfig(count_scale=0.01))
     rng = np.random.default_rng(0)
     jid = 0
     for step in range(30):

@@ -24,7 +24,8 @@ import os
 import numpy as np
 import pytest
 
-from repro.sched import FleetScheduler, get_trace
+from repro.sched import (AdmissionConfig, CellConfig, FleetScheduler,
+                         SchedulerConfig, get_trace)
 from repro.sched.traces import fault_trace
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
@@ -62,10 +63,11 @@ def test_explicit_defaults_match_implicit():
 
 def _run(trace, window, *, n=12, cells=1, strategy="new", faults=None):
     spec = get_trace(trace, seed=0, n_arrivals=n)
-    sched = FleetScheduler(spec.cluster, strategy,
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           count_scale=spec.count_scale,
-                           admission_window=window, cells=cells)
+    sched = FleetScheduler(spec.cluster, strategy, config=SchedulerConfig(
+        admission=AdmissionConfig(window=window),
+        cells=CellConfig(cells=cells),
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale))
     sched.submit_trace(spec.arrivals)
     if faults is not None:
         sched.submit_faults(faults)
@@ -100,10 +102,11 @@ def test_uncontended_jobs_admit_within_window():
 def _stepped_run(*, cells, window=0.0, faults=None, n=16,
                  every=1, trace="fleet64"):
     spec = get_trace(trace, seed=0, n_arrivals=n)
-    sched = FleetScheduler(spec.cluster, "new",
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           count_scale=spec.count_scale,
-                           admission_window=window, cells=cells)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        admission=AdmissionConfig(window=window),
+        cells=CellConfig(cells=cells),
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale))
     sched.submit_trace(spec.arrivals)
     if faults is not None:
         sched.submit_faults(faults(spec.cluster))

@@ -24,7 +24,8 @@ from repro.core.simulator import SimHandle
 from repro.obs.export import (to_chrome, to_csv, validate_chrome,
                               validate_native)
 from repro.search import search_placement
-from repro.sched import FleetScheduler, SchedulerInvariantError, get_trace
+from repro.sched import (FleetScheduler, SchedulerConfig,
+                         SchedulerInvariantError, get_trace)
 
 KB = 1 << 10
 
@@ -39,11 +40,12 @@ def _run_fleet(remap_interval=None, strategy="blocked", sim_backend="auto",
     spec = get_trace("rack_oversub", seed=seed, rate=rate,
                      n_arrivals=n_arrivals)
     sched = FleetScheduler(spec.cluster, strategy,
-                           remap_interval=remap_interval,
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           count_scale=spec.count_scale,
-                           sim_backend=sim_backend, recorder=recorder,
-                           **sched_kw)
+                           config=SchedulerConfig.from_legacy(
+                               remap_interval=remap_interval,
+                               state_bytes_per_proc=spec.state_bytes_per_proc,
+                               count_scale=spec.count_scale,
+                               sim_backend=sim_backend, **sched_kw),
+                           recorder=recorder)
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()

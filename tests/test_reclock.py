@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.core.graphs import AppGraph, ClusterTopology, PATTERNS
-from repro.sched import DEPARTURE, REMAP, Event, FleetScheduler
+from repro.sched import (DEPARTURE, REMAP, Event, FleetScheduler,
+                         RemapConfig, SchedulerConfig)
 
 MB = 1 << 20
 
@@ -27,8 +28,10 @@ def _heavy(jid, count, procs=16):
 
 def _run(jobs_at, reclock, strategy="cyclic", **kw):
     cluster = ClusterTopology(n_nodes=2)
-    sched = FleetScheduler(cluster, strategy, count_scale=COUNT_SCALE,
-                           reclock=reclock, **kw)
+    sched = FleetScheduler(cluster, strategy,
+                           config=SchedulerConfig.from_legacy(
+                               count_scale=COUNT_SCALE, reclock=reclock,
+                               **kw))
     for g, at in jobs_at:
         sched.submit(g, at=at)
     stats = sched.run()
@@ -119,8 +122,8 @@ def test_zero_traffic_job_survives_the_clock(reclock):
                       lam=np.zeros((n, n)),
                       cnt=np.zeros((n, n), dtype=np.int64), job_id=0)
     cluster = ClusterTopology(n_nodes=2)
-    sched = FleetScheduler(cluster, "cyclic", count_scale=COUNT_SCALE,
-                           reclock=reclock)
+    sched = FleetScheduler(cluster, "cyclic", config=SchedulerConfig(
+        count_scale=COUNT_SCALE, reclock=reclock))
     sched.submit(silent, at=0.0)
     sched.submit(_heavy(1, 60), at=0.5)
     sched.run()
@@ -130,7 +133,8 @@ def test_zero_traffic_job_survives_the_clock(reclock):
 
 def test_stale_epoch_departure_event_is_ignored():
     cluster = ClusterTopology(n_nodes=2)
-    sched = FleetScheduler(cluster, "cyclic", count_scale=COUNT_SCALE)
+    sched = FleetScheduler(cluster, "cyclic",
+                           config=SchedulerConfig(count_scale=COUNT_SCALE))
     sched.submit(_heavy(0, 200), at=0.0)
     assert sched.step().kind == "arrival"
     job = sched.jobs[0]
@@ -167,8 +171,9 @@ def test_random_traces_never_double_depart_and_invariants_hold():
         rng = np.random.default_rng(seed)
         cluster = ClusterTopology(n_nodes=2)
         sched = CountingScheduler(
-            cluster, "cyclic", count_scale=0.1, remap_interval=1.0,
-            util_threshold=0.5, state_bytes_per_proc=1 * MB)
+            cluster, "cyclic", config=SchedulerConfig(
+                remap=RemapConfig(interval=1.0, util_threshold=0.5),
+                count_scale=0.1, state_bytes_per_proc=1 * MB))
         t = 0.0
         n_jobs = 10
         for jid in range(n_jobs):
@@ -194,8 +199,8 @@ def test_fifo_drain_placement_schedules_remap_tick():
     """A queue drain changes contention like an arrival does — it must
     keep the periodic remap tick alive (it previously lapsed here)."""
     cluster = ClusterTopology(n_nodes=2)
-    sched = FleetScheduler(cluster, "cyclic", count_scale=COUNT_SCALE,
-                           remap_interval=None)
+    sched = FleetScheduler(cluster, "cyclic", config=SchedulerConfig(
+        count_scale=COUNT_SCALE, remap=RemapConfig(interval=None)))
     sched.submit(_heavy(0, 120, procs=24), at=0.0)
     sched.submit(_heavy(1, 120, procs=24), at=0.1)
     sched.step()                       # place job 0 (no tick: interval None)
@@ -236,9 +241,9 @@ def test_remap_commit_samples_post_remap_utilisation(reclock):
     from repro.sched import get_trace
     Probe.commits_probed = 0
     spec = get_trace("table4_poisson", n_arrivals=12, seed=0)
-    sched = Probe(spec.cluster, "new", remap_interval=5.0,
-                  state_bytes_per_proc=64 * MB,
-                  count_scale=spec.count_scale, reclock=reclock)
+    sched = Probe(spec.cluster, "new", config=SchedulerConfig(
+        remap=RemapConfig(interval=5.0), state_bytes_per_proc=64 * MB,
+        count_scale=spec.count_scale, reclock=reclock))
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()

@@ -10,7 +10,8 @@ import pytest
 from repro.core import ClusterTopology, FreeCoreTracker, STRATEGIES
 from repro.core.graphs import AppGraph, PATTERNS
 from repro.core.workloads import poisson_trace, synt_workload_3, table_poisson_trace
-from repro.sched import FleetScheduler, get_trace
+from repro.sched import (FleetScheduler, RemapConfig, SchedulerConfig,
+                         get_trace)
 
 KB = 1 << 10
 MB = 1 << 20
@@ -106,9 +107,9 @@ def test_admit_raises_when_job_cannot_fit():
 # ---------------------------------------------------------------------------
 def test_event_loop_runs_trace_and_departs_everything():
     spec = get_trace("table4_poisson", n_arrivals=8, seed=0)
-    sched = FleetScheduler(spec.cluster, "new",
-                           state_bytes_per_proc=spec.state_bytes_per_proc,
-                           count_scale=spec.count_scale)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale))
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()
@@ -123,7 +124,8 @@ def test_event_loop_runs_trace_and_departs_everything():
 def test_oversubscribed_arrivals_queue_fifo():
     """Jobs beyond capacity wait and are admitted on departure, in order."""
     cluster = ClusterTopology(n_nodes=2)          # 32 cores
-    sched = FleetScheduler(cluster, "blocked", count_scale=0.1)
+    sched = FleetScheduler(cluster, "blocked",
+                           config=SchedulerConfig(count_scale=0.1))
     for k, at in enumerate((0.0, 0.1, 0.2)):
         sched.submit(_job(k, "linear", procs=24, count=20), at=at)
     stats = sched.run()
@@ -139,10 +141,11 @@ def test_oversubscribed_arrivals_queue_fifo():
 # ---------------------------------------------------------------------------
 def _run_table4(state_bytes_per_proc, migration_cost_factor=1.0):
     spec = get_trace("table4_poisson", n_arrivals=12, seed=0)
-    sched = FleetScheduler(spec.cluster, "new", remap_interval=5.0,
-                           state_bytes_per_proc=state_bytes_per_proc,
-                           migration_cost_factor=migration_cost_factor,
-                           count_scale=spec.count_scale)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        remap=RemapConfig(interval=5.0,
+                          migration_cost_factor=migration_cost_factor),
+        state_bytes_per_proc=state_bytes_per_proc,
+        count_scale=spec.count_scale))
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()

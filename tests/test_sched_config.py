@@ -1,0 +1,160 @@
+"""SchedulerConfig API redesign tests (DESIGN.md §15).
+
+The contracts of the grouped-config constructor:
+
+1. **Byte identity across the bridge** — the legacy flat-kwarg path
+   (``FleetScheduler(cluster, strategy, remap_interval=5.0, ...)``) and
+   the config path (``config=SchedulerConfig(...)``) build the identical
+   scheduler: the pinned golden scenarios replay bit-for-bit through
+   both, and the legacy path still matches the committed goldens.
+2. **Typed errors** — mixing ``config=`` with flat kwargs raises
+   ``TypeError``; unknown kwargs raise ``TypeError`` listing the known
+   legacy names (the old signature's behaviour); the legacy path warns
+   ``DeprecationWarning`` exactly once per construction.
+3. **Trace registry** — ``get_trace`` raises a ``KeyError`` listing
+   ``trace_names()`` for unknown traces, mirroring
+   ``resolve_strategy``'s contract; the ``TRACES`` mapping stays
+   importable and read-only.
+"""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.sched import (AdmissionConfig, AutoscaleConfig, CellConfig,
+                         FleetScheduler, RecoveryConfig, RemapConfig,
+                         SchedulerConfig, get_trace, trace_names)
+from repro.sched.traces import TRACES, reference_fault_trace
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+_spec = importlib.util.spec_from_file_location(
+    "regen_sched_golden", os.path.join(GOLDEN_DIR, "regen_sched_golden.py"))
+regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regen)
+
+with open(os.path.join(GOLDEN_DIR, "sched_seq_golden.json")) as f:
+    GOLDEN = json.load(f)
+
+
+def _run_legacy(trace_kw: dict, sched_kw: dict, faults: bool) -> dict:
+    """The scenario through the DEPRECATED flat-kwarg constructor."""
+    kw = dict(trace_kw)
+    spec = get_trace(kw.pop("name"), **kw)
+    flat = dict(sched_kw)
+    strategy = flat.pop("strategy", "new")
+    with pytest.warns(DeprecationWarning, match="flat FleetScheduler"):
+        sched = FleetScheduler(spec.cluster, strategy,
+                               state_bytes_per_proc=spec.state_bytes_per_proc,
+                               count_scale=spec.count_scale, **flat)
+    sched.submit_trace(spec.arrivals)
+    if faults:
+        sched.submit_faults(reference_fault_trace(spec.cluster))
+    stats = sched.run()
+    sched.check_invariants()
+    d = stats.to_dict()
+    out = {f: d[f] for f in regen.FIELDS}
+    out["per_job"] = {str(k): v for k, v in out["per_job"].items()}
+    return out
+
+
+# -- 1. byte identity across the legacy bridge ----------------------------
+
+@pytest.mark.parametrize("name,trace_kw,sched_kw,faults", regen.SCENARIOS,
+                         ids=[s[0] for s in regen.SCENARIOS])
+def test_legacy_kwargs_replay_goldens_byte_identically(
+        name, trace_kw, sched_kw, faults):
+    """Flat kwargs == committed golden == config path, bit-for-bit."""
+    legacy = _run_legacy(trace_kw, sched_kw, faults)
+    assert json.dumps(legacy, sort_keys=True) \
+        == json.dumps(GOLDEN[name], sort_keys=True)
+
+
+def test_from_legacy_builds_the_composed_config():
+    got = SchedulerConfig.from_legacy(
+        remap_interval=5.0, util_threshold=0.5, migration_cost_factor=0.0,
+        remap_budget=64, admission_window=0.5, cells=4,
+        failure_policy="elastic", drain_policy="kill",
+        count_scale=0.1, reclock=False)
+    want = SchedulerConfig(
+        remap=RemapConfig(interval=5.0, util_threshold=0.5,
+                          migration_cost_factor=0.0, budget=64),
+        admission=AdmissionConfig(window=0.5),
+        cells=CellConfig(cells=4),
+        recovery=RecoveryConfig(failure_policy="elastic",
+                                drain_policy="kill"),
+        count_scale=0.1, reclock=False)
+    assert got == want
+
+
+def test_config_sections_are_frozen():
+    cfg = SchedulerConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.remap.interval = 1.0          # type: ignore[misc]
+
+
+# -- 2. typed constructor errors ------------------------------------------
+
+def test_config_plus_legacy_kwargs_is_an_error():
+    from repro.core import ClusterTopology
+    with pytest.raises(TypeError, match="not both"):
+        FleetScheduler(ClusterTopology(n_nodes=2), "new",
+                       config=SchedulerConfig(), remap_interval=5.0)
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_unknown_kwarg_raises_listing_known_names():
+    from repro.core import ClusterTopology
+    with pytest.raises(TypeError, match="unknown FleetScheduler kwargs"):
+        FleetScheduler(ClusterTopology(n_nodes=2), "new", bogus_knob=1)
+    with pytest.raises(TypeError, match="remap_interval"):
+        SchedulerConfig.from_legacy(bogus_knob=1)
+
+
+def test_legacy_path_warns_deprecation_and_config_path_does_not(recwarn):
+    import warnings
+    from repro.core import ClusterTopology
+    cluster = ClusterTopology(n_nodes=2)
+    with pytest.warns(DeprecationWarning):
+        FleetScheduler(cluster, "new", remap_interval=5.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        FleetScheduler(cluster, "new", config=SchedulerConfig(
+            remap=RemapConfig(interval=5.0)))
+
+
+def test_autoscale_requires_reclock():
+    from repro.core import ClusterTopology
+    from repro.serve import ModelSLO
+    with pytest.raises(ValueError, match="reclock"):
+        FleetScheduler(ClusterTopology(n_nodes=2), "new",
+                       config=SchedulerConfig(
+                           reclock=False,
+                           autoscale=AutoscaleConfig(
+                               enabled=True,
+                               slos=(ModelSLO("m", 0.5, 100.0),))))
+
+
+# -- 3. the trace registry ------------------------------------------------
+
+def test_get_trace_unknown_name_lists_known_traces():
+    with pytest.raises(KeyError, match="unknown trace"):
+        get_trace("no_such_trace")
+    try:
+        get_trace("no_such_trace")
+    except KeyError as exc:
+        for name in trace_names():
+            assert name in str(exc)
+
+
+def test_trace_names_matches_registry_and_is_sorted():
+    assert list(trace_names()) == sorted(TRACES)
+    assert "table4_poisson" in trace_names()
+    assert "serve_slo" in trace_names()
+
+
+def test_traces_mapping_is_read_only():
+    with pytest.raises(TypeError):
+        TRACES["rogue"] = lambda: None    # type: ignore[index]

@@ -28,7 +28,9 @@ except ImportError:  # pinned image lacks hypothesis — deterministic fallback
     from repro.testing import given, settings, strategies as st
 
 from repro.core.workloads import rack_oversub_mix
-from repro.sched import (FleetScheduler, get_trace, stale_event)
+from repro.sched import (AdmissionConfig, CellConfig, FleetScheduler,
+                         RemapConfig, SchedulerConfig, get_trace,
+                         stale_event)
 from repro.sched.admission import AdmissionController
 from repro.sched.cells import GLOBAL_CELL, build_cells
 from repro.sched.clock import WorkClock
@@ -74,9 +76,9 @@ def test_stale_departure_events_are_skipped():
     """Integration: a re-key bumps the job epoch, so the superseded
     departure event must fall through without mutating the fleet."""
     spec = get_trace("table4_poisson", seed=0, n_arrivals=6)
-    sched = FleetScheduler(spec.cluster, "new",
-                          count_scale=spec.count_scale,
-                          state_bytes_per_proc=spec.state_bytes_per_proc)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        count_scale=spec.count_scale,
+        state_bytes_per_proc=spec.state_bytes_per_proc))
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()
@@ -92,9 +94,10 @@ def test_stale_departure_events_are_skipped():
 def _mini_sched(**kw):
     spec = get_trace("table4_poisson", seed=0, n_arrivals=4)
     sched = FleetScheduler(spec.cluster, "new",
-                          count_scale=spec.count_scale,
-                          state_bytes_per_proc=spec.state_bytes_per_proc,
-                          **kw)
+                           config=SchedulerConfig.from_legacy(
+                               count_scale=spec.count_scale,
+                               state_bytes_per_proc=spec.state_bytes_per_proc,
+                               **kw))
     return spec, sched
 
 
@@ -221,10 +224,11 @@ def test_nested_cells_end_to_end():
     rack-spanning jobs bind to their pod (not GLOBAL), escalation walks
     one level at a time, and every event preserves the invariants."""
     spec = get_trace("fleet64", n_arrivals=24, seed=0)
-    sched = FleetScheduler(spec.cluster, "new", cells="pod/rack",
-                          count_scale=spec.count_scale,
-                          state_bytes_per_proc=spec.state_bytes_per_proc,
-                          admission_window=0.5)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        cells=CellConfig(cells="pod/rack"),
+        admission=AdmissionConfig(window=0.5),
+        count_scale=spec.count_scale,
+        state_bytes_per_proc=spec.state_bytes_per_proc))
     assert sched.n_cells == 20
     assert len(sched.fabric.leaves) == 16
     assert len(sched.fabric.parents) == 4
@@ -251,10 +255,11 @@ def test_nested_matches_flat_outcomes():
     spec = get_trace("fleet64", n_arrivals=16, seed=1)
 
     def run(cells):
-        sched = FleetScheduler(spec.cluster, "new", cells=cells,
-                              count_scale=spec.count_scale,
-                              state_bytes_per_proc=spec.state_bytes_per_proc,
-                              admission_window=0.5)
+        sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+            cells=CellConfig(cells=cells),
+            admission=AdmissionConfig(window=0.5),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc))
         sched.submit_trace(spec.arrivals)
         stats = sched.run()
         sched.check_invariants()
@@ -274,9 +279,10 @@ def _packed_two_cells():
     spanning-free imbalance the cross-cell pass must be able to relieve."""
     mix = [g for g in rack_oversub_mix() if g.n_procs in (24, 8)]
     cluster = fleet64_cluster()
-    sched = FleetScheduler(cluster, "new", cells="rack",
-                          remap_interval=2.0, util_threshold=0.05,
-                          migration_cost_factor=0.0)
+    sched = FleetScheduler(cluster, "new", config=SchedulerConfig(
+        cells=CellConfig(cells="rack"),
+        remap=RemapConfig(interval=2.0, util_threshold=0.05,
+                          migration_cost_factor=0.0)))
     jid = 0
     for k in range(2):
         for g in mix:
@@ -333,7 +339,8 @@ def test_admit_explicit_cell_rollback():
     back before the global fallback (no leaked partial claims)."""
     mix = [g for g in rack_oversub_mix() if g.n_procs in (24, 16)]
     cluster = fleet64_cluster()
-    sched = FleetScheduler(cluster, "new", cells="rack")
+    sched = FleetScheduler(cluster, "new", config=SchedulerConfig(
+        cells=CellConfig(cells="rack")))
     cell = sched.fabric.cells[0]
     sched.admit(dataclasses.replace(mix[0], job_id=0), cell=cell)  # 24/32
     sched.check_invariants()

@@ -25,7 +25,8 @@ except ImportError:  # pinned image lacks hypothesis — deterministic fallback
 
 from repro.core.graphs import AppGraph, ClusterTopology, FreeCoreTracker
 from repro.core.mapping import ONE_SHOT_STRATEGIES, STRATEGIES
-from repro.sched import FleetScheduler, get_trace, resolve_strategy
+from repro.sched import (FleetScheduler, RemapConfig, SchedulerConfig,
+                         get_trace, resolve_strategy)
 from repro.search import (SearchState, domain_sizes, neighbours,
                           objective_of, search_placement, search_strategy,
                           search_strategy_result)
@@ -200,8 +201,10 @@ def test_scheduler_admission_with_search_strategy():
     spec = get_trace("table4_poisson", n_arrivals=6)
     sched = FleetScheduler(
         spec.cluster, make_search_strategy("new", budget=24, population=8),
-        remap_interval=5.0, count_scale=spec.count_scale,
-        state_bytes_per_proc=spec.state_bytes_per_proc)
+        config=SchedulerConfig(
+            remap=RemapConfig(interval=5.0),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc))
     sched.submit_trace(spec.arrivals)
     stats = sched.run()
     sched.check_invariants()
@@ -213,10 +216,11 @@ def test_scheduler_remap_budget_search():
     def run():
         spec = get_trace("rack_oversub", n_arrivals=8)
         sched = FleetScheduler(
-            spec.cluster, "new", remap_interval=5.0,
-            count_scale=spec.count_scale,
-            state_bytes_per_proc=spec.state_bytes_per_proc,
-            remap_budget=48, remap_population=8, remap_rng_seed=3)
+            spec.cluster, "new", config=SchedulerConfig(
+                remap=RemapConfig(interval=5.0, budget=48, population=8,
+                                  rng_seed=3),
+                count_scale=spec.count_scale,
+                state_bytes_per_proc=spec.state_bytes_per_proc))
         sched.submit_trace(spec.arrivals)
         stats = sched.run()
         sched.check_invariants()
@@ -241,10 +245,10 @@ def test_remap_budget_never_exceeded():
     spec = get_trace("rack_oversub", n_arrivals=8)
     calls = []
     sched = FleetScheduler(
-        spec.cluster, "new", remap_interval=5.0,
-        count_scale=spec.count_scale,
-        state_bytes_per_proc=spec.state_bytes_per_proc,
-        remap_budget=32, remap_population=8)
+        spec.cluster, "new", config=SchedulerConfig(
+            remap=RemapConfig(interval=5.0, budget=32, population=8),
+            count_scale=spec.count_scale,
+            state_bytes_per_proc=spec.state_bytes_per_proc))
     orig = sched._sim.simulate_batch
 
     def counting(jobs, placements):

@@ -1,0 +1,278 @@
+"""Serving-fleet SLO closed loop tests (DESIGN.md §15).
+
+Covers the pure-math serving layer (``repro.serve.fleet`` — request
+streams, the M/M/1-on-slowdown latency model, SLO accounting) and the
+AutoscaleEngine's contracts through the facade:
+
+* violation-seconds is the piecewise-constant integral of epochs whose
+  projected p99 exceeded the target, with span open/close bookkeeping;
+* resident replicas never depart on their own — only a committed
+  drop-replica action or the run horizon ends a residency;
+* the closed loop beats the static fleet on the bursty ``serve_slo``
+  scenario and every structural action is priced: a prohibitive
+  ``migration_cost_factor`` vetoes all scale-ups, exactly like it
+  vetoes remaps.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core import ClusterTopology
+from repro.core.graphs import AppGraph
+from repro.sched import (AutoscaleConfig, FleetScheduler, RemapConfig,
+                         SchedulerConfig, get_trace)
+from repro.serve import (LN100, ModelSLO, RequestStream, SLOAccountant,
+                         TrafficSpike, clone_replica, fleet_p99s, model_key,
+                         replica_p99, route_weights)
+
+KB = 1 << 10
+
+
+def _template(name="m0", procs=8):
+    return AppGraph.from_pattern(name, "all_to_all", procs, 64 * KB,
+                                 10.0, 50, job_id=0)
+
+
+# ---------------------------------------------------------------------------
+# RequestStream — determinism, diurnal swell, spikes, the closing tick
+# ---------------------------------------------------------------------------
+def test_stream_is_seed_deterministic():
+    kw = dict(base_rates={"a": 40.0, "b": 20.0}, horizon=60.0, epoch_dt=4.0,
+              diurnal_period=60.0, diurnal_amp=0.3,
+              spikes=(TrafficSpike("a", 20.0, 10.0, 3.0),))
+    e1 = RequestStream(seed=7, **kw).epochs()
+    e2 = RequestStream(seed=7, **kw).epochs()
+    e3 = RequestStream(seed=8, **kw).epochs()
+    assert [(e.time, e.rates) for e in e1] == [(e.time, e.rates) for e in e2]
+    assert [e.rates for e in e1] != [e.rates for e in e3]
+
+
+def test_epoch_grid_ends_exactly_at_horizon():
+    s = RequestStream({"a": 10.0}, horizon=10.0, epoch_dt=4.0,
+                      poisson=False)
+    times = [e.time for e in s.epochs()]
+    assert times == [0.0, 4.0, 8.0, 10.0]
+    # horizon divisible by epoch_dt: no zero-width epoch appears
+    s = RequestStream({"a": 10.0}, horizon=8.0, epoch_dt=4.0, poisson=False)
+    assert [e.time for e in s.epochs()] == [0.0, 4.0, 8.0]
+
+
+def test_expected_rate_applies_spike_and_diurnal():
+    s = RequestStream({"a": 10.0, "b": 5.0}, horizon=100.0, epoch_dt=10.0,
+                      diurnal_period=100.0, diurnal_amp=0.5,
+                      spikes=(TrafficSpike("a", 40.0, 20.0, 3.0),),
+                      poisson=False)
+    assert s.expected_rate("a", 0.0) == pytest.approx(10.0)
+    # t=25 is the diurnal peak (sin = 1)
+    assert s.expected_rate("a", 25.0) == pytest.approx(15.0)
+    # inside the spike window the multiplier stacks on the diurnal factor
+    diurnal = 1.0 + 0.5 * math.sin(2.0 * math.pi * 0.45)
+    assert s.expected_rate("a", 45.0) == pytest.approx(10.0 * diurnal * 3.0)
+    assert s.expected_rate("b", 45.0) == pytest.approx(5.0 * diurnal)
+    # spike window is [start, start+duration)
+    assert s.expected_rate("a", 60.0) < 30.0
+
+
+def test_stream_validates_horizon_and_epoch():
+    with pytest.raises(ValueError):
+        RequestStream({"a": 1.0}, horizon=0.0, epoch_dt=1.0)
+    with pytest.raises(ValueError):
+        RequestStream({"a": 1.0}, horizon=10.0, epoch_dt=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Latency model — replica_p99 / route_weights / fleet_p99s
+# ---------------------------------------------------------------------------
+def test_replica_p99_is_the_mm1_sojourn_tail():
+    assert replica_p99(50.0, 100.0, 1.0) == pytest.approx(LN100 / 50.0)
+    # slowdown divides capacity: mu = 100/2 = 50, lam 40 -> tail over 10
+    assert replica_p99(40.0, 100.0, 2.0) == pytest.approx(LN100 / 10.0)
+    # at or above capacity the queue diverges
+    assert replica_p99(100.0, 100.0, 1.0) == math.inf
+    assert replica_p99(60.0, 100.0, 2.0) == math.inf
+    # slowdowns below 1 are clamped (a replica can't beat its solo run)
+    assert replica_p99(50.0, 100.0, 0.5) == pytest.approx(LN100 / 50.0)
+
+
+def test_route_weights_capacity_favours_uncontended_replicas():
+    uniform = route_weights([1, 2], {1: 100.0, 2: 50.0}, mode="uniform")
+    assert uniform == {1: 0.5, 2: 0.5}
+    cap = route_weights([1, 2], {1: 100.0, 2: 50.0}, mode="capacity")
+    assert cap[1] == pytest.approx(2.0 / 3.0)
+    assert cap[2] == pytest.approx(1.0 / 3.0)
+    # all-zero capacity degrades to uniform rather than dividing by zero
+    assert route_weights([1, 2], {}, mode="capacity") == {1: 0.5, 2: 0.5}
+    assert route_weights([], {}) == {}
+    with pytest.raises(ValueError, match="unknown routing mode"):
+        route_weights([1], {1: 1.0}, mode="bogus")
+
+
+def test_fleet_p99s_no_replica_is_inf_only_under_load():
+    slos = {"a": ModelSLO("a", 0.5, 100.0), "b": ModelSLO("b", 0.5, 100.0)}
+    p = fleet_p99s(slos, {"a": [], "b": []}, {}, {"a": 10.0, "b": 0.0}, {})
+    assert p["a"] == math.inf and p["b"] == 0.0
+    # per-model p99 is the WORST replica's p99
+    p = fleet_p99s(slos, {"a": [1, 2], "b": []},
+                   {"a": {1: 0.5, 2: 0.5}}, {"a": 80.0}, {1: 1.0, 2: 2.0})
+    assert p["a"] == pytest.approx(replica_p99(40.0, 100.0, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# Replica cloning
+# ---------------------------------------------------------------------------
+def test_clone_replica_shares_matrices_but_not_the_flat_cache():
+    t = _template("qwen:decode")
+    c = clone_replica(t, 7)
+    assert c.name == "qwen:decode@7" and c.job_id == 7
+    assert model_key(c.name) == "qwen:decode"
+    assert c.L is t.L and c.lam is t.lam and c.cnt is t.cnt
+    # the flat-message cache depends on job_id tie-break phases — a
+    # shared cache would poison the clone
+    assert c._flat_cache is not t._flat_cache
+    # cloning a clone re-derives the template name
+    assert clone_replica(c, 9).name == "qwen:decode@9"
+
+
+# ---------------------------------------------------------------------------
+# SLOAccountant — the violation-seconds integral and span bookkeeping
+# ---------------------------------------------------------------------------
+def test_accountant_integrates_violating_epochs_only():
+    acct = SLOAccountant({"a": 0.5, "b": 0.5})
+    accrued, closed = acct.observe(0.0, 4.0, {"a": 1.0, "b": 0.1})
+    assert accrued == {"a": 4.0} and closed == []
+    accrued, closed = acct.observe(4.0, 8.0, {"a": 1.0, "b": 0.1})
+    assert acct.violation_s == {"a": 8.0, "b": 0.0}
+    # recovery closes the span at the observation start
+    accrued, closed = acct.observe(8.0, 12.0, {"a": 0.2, "b": 0.1})
+    assert closed == [("a", 0.0, 8.0)]
+    assert acct.total_violation_s == 8.0
+
+
+def test_accountant_close_flushes_open_spans():
+    acct = SLOAccountant({"a": 0.5, "b": 0.5})
+    acct.observe(0.0, 4.0, {"a": 1.0, "b": 2.0})
+    assert sorted(acct.close(4.0)) == [("a", 0.0, 4.0), ("b", 0.0, 4.0)]
+    assert acct.close(4.0) == []           # idempotent once flushed
+    # a model absent from the projection does not violate
+    acct = SLOAccountant({"a": 0.5})
+    accrued, _ = acct.observe(0.0, 1.0, {})
+    assert accrued == {} and acct.total_violation_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Resident replicas through the facade
+# ---------------------------------------------------------------------------
+def test_resident_job_survives_the_run_loop():
+    cluster = ClusterTopology(n_nodes=2)
+    sched = FleetScheduler(cluster, "new",
+                           config=SchedulerConfig(count_scale=0.02))
+    sched.submit(_template(), at=0.0, resident=True)
+    sched.run(until=50.0)
+    assert 0 in sched.live and not sched.done
+    assert sched.now == 50.0
+    # a plain (non-resident) job on the same path departs normally
+    sched2 = FleetScheduler(cluster, "new",
+                            config=SchedulerConfig(count_scale=0.02))
+    sched2.submit(_template(), at=0.0)
+    sched2.run(until=1e6)
+    assert 0 in sched2.done
+
+
+def test_submit_traffic_requires_enabled_autoscale():
+    cluster = ClusterTopology(n_nodes=2)
+    sched = FleetScheduler(cluster, "new")
+    stream = RequestStream({"a": 10.0}, horizon=10.0, epoch_dt=5.0)
+    with pytest.raises(ValueError, match="submit_traffic"):
+        sched.submit_traffic(stream)
+
+
+# ---------------------------------------------------------------------------
+# The closed loop end-to-end on the bursty serve_slo scenario
+# ---------------------------------------------------------------------------
+def _run_serve(actions, routing="capacity", migration_cost_factor=1.0,
+               horizon=120.0):
+    spec = get_trace("serve_slo", seed=0, horizon=horizon, epoch_dt=4.0)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        remap=RemapConfig(interval=None,
+                          migration_cost_factor=migration_cost_factor),
+        autoscale=AutoscaleConfig(enabled=True, actions=actions,
+                                  routing=routing, slos=spec.slos,
+                                  max_replicas=5, lookahead_s=30.0),
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale))
+    for g in spec.replicas:
+        sched.submit(g, at=0.0, resident=True)
+    sched.submit_traffic(spec.stream)
+    stats = sched.run()
+    sched.check_invariants()
+    return sched, stats
+
+
+def test_autoscale_beats_static_on_violation_seconds():
+    _, static = _run_serve(actions=False, routing="uniform")
+    sched, auto = _run_serve(actions=True)
+    assert static.slo_violation_s > 0.0, "scenario no longer stresses SLOs"
+    assert auto.slo_violation_s < static.slo_violation_s
+    assert auto.n_scale_ups >= 1
+    # the accountant's per-model breakdown sums to the headline number
+    assert sum(auto.slo_violation_by_model.values()) \
+        == pytest.approx(auto.slo_violation_s)
+    # every decision the engine recorded is priced and stamped
+    assert sched.autoscale.decisions
+    for d in sched.autoscale.decisions:
+        assert d.action in ("scale_up", "scale_down")
+        assert d.committed in (True, False)
+    n_committed_ups = sum(1 for d in sched.autoscale.decisions
+                          if d.action == "scale_up" and d.committed)
+    assert n_committed_ups == auto.n_scale_ups
+
+
+def test_prohibitive_migration_cost_vetoes_every_scale_up():
+    sched, stats = _run_serve(actions=True, migration_cost_factor=1e9)
+    assert stats.n_scale_ups == 0
+    ups = [d for d in sched.autoscale.decisions if d.action == "scale_up"]
+    assert ups and all(not d.committed for d in ups)
+
+
+def test_static_leg_takes_no_structural_actions():
+    sched, stats = _run_serve(actions=False, routing="uniform")
+    assert stats.n_scale_ups == 0 and stats.n_scale_downs == 0
+    assert sched.autoscale.decisions == []
+    # residents are still live at the horizon — nothing departed
+    assert len(sched.live) == 4
+
+
+def test_serve_stats_round_trip_through_to_dict():
+    _, stats = _run_serve(actions=True)
+    d = json.loads(json.dumps(stats.to_dict(), sort_keys=True))
+    assert d["slo_violation_s"] == pytest.approx(stats.slo_violation_s)
+    assert d["n_scale_ups"] == stats.n_scale_ups
+    assert d["n_scale_downs"] == stats.n_scale_downs
+    assert d["n_autoscale_rejects"] == stats.n_autoscale_rejects
+
+
+def test_routing_shifts_follow_asymmetric_contention():
+    """Capacity routing reacts when one replica is squeezed: feed the
+    engine asymmetric slowdowns directly and check the weight refresh."""
+    spec = get_trace("serve_slo", seed=0, horizon=40.0, epoch_dt=4.0)
+    sched = FleetScheduler(spec.cluster, "new", config=SchedulerConfig(
+        remap=RemapConfig(interval=None),
+        autoscale=AutoscaleConfig(enabled=True, actions=False,
+                                  routing="capacity", slos=spec.slos),
+        state_bytes_per_proc=spec.state_bytes_per_proc,
+        count_scale=spec.count_scale))
+    for g in spec.replicas:
+        sched.submit(g, at=0.0, resident=True)
+    sched.run(until=0.0)                  # place residents, no traffic
+    eng = sched.autoscale
+    replicas = eng.replicas()
+    m = spec.slos[0].model
+    j0, j1 = replicas[m][:2]
+    eng._refresh_routing(replicas, None, {j0: 1.0, j1: 4.0})
+    w = eng.weights[m]
+    assert w[j0] == pytest.approx(0.8) and w[j1] == pytest.approx(0.2)
+    # a second refresh with flipped contention counts as a shift
+    before = sched.metrics.counter("sched.routing_shifts").total
+    eng._refresh_routing(replicas, None, {j0: 4.0, j1: 1.0})
+    assert sched.metrics.counter("sched.routing_shifts").total > before
